@@ -1,0 +1,124 @@
+"""Shared benchmark machinery: trace capture → cost-model inputs.
+
+Methodology (mirrors paper §5): train each CNN briefly on the synthetic
+zero-mean image stream (CPU-feasible reduced geometry), capture per-layer
+post-ReLU activations, derive the cost-model densities:
+
+  x_density        = measured nonzero fraction of the layer's input act
+  out_mask_density = same tensor's mask density (σ' footprint — identical
+                     by the paper's §3.2 theorem, property-tested)
+  g_in_density     = measured output-act density if the output feeds a
+                     ReLU with NO BatchNorm in between, else 1.0 (BN
+                     re-densifies gradients — Fig. 3c rule)
+
+The cost model is then evaluated at the paper's full ImageNet geometry
+(224², width 1.0, batch 16) with these densities; spatial work maps are
+resampled from the captured masks.
+"""
+from __future__ import annotations
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import costmodel as cm
+from repro.core.sparsity import element_sparsity
+from repro.data.pipeline import image_batch
+from repro.models.cnn import build_cnn
+
+BATCH = 16
+
+
+@functools.lru_cache(maxsize=None)
+def capture_traces(name: str, *, train_steps: int = 3, image_size: int = 32,
+                   width: float = 0.25, batch: int = 8
+                   ) -> Tuple[Dict[str, np.ndarray], Dict[str, float]]:
+    """Returns (captured acts, per-layer density) after a few real steps."""
+    model = build_cnn(name, image_size=image_size, width=width,
+                      num_classes=100)
+    params = model.init(jax.random.key(0))
+    for step in range(train_steps):
+        img, labels = image_batch(0, step, batch=batch,
+                                  image_size=image_size, num_classes=100)
+        grads = jax.grad(lambda p: model.loss(p, img, labels))(params)
+        params = jax.tree.map(lambda p, g: p - 0.05 * g, params, grads)
+    cap: Dict[str, jnp.ndarray] = {}
+    img, _ = image_batch(0, train_steps, batch=batch, image_size=image_size,
+                         num_classes=100)
+    model.apply(params, img, capture=cap)
+    acts = {k: np.asarray(v) for k, v in cap.items()}
+    dens = {k: 1.0 - float(element_sparsity(v)) for k, v in cap.items()}
+    return acts, dens
+
+
+def _resample_map(m: np.ndarray, target: int) -> np.ndarray:
+    """Work-map resample.  Downsampling uses nearest-neighbour; when the
+    full geometry is LARGER than the captured one we keep the captured
+    resolution — upsampling would tile constant blocks into the 16×16 PE
+    grid and fabricate spatial imbalance the real 224² maps don't have
+    (each full-geometry PE tile averages ≥7² locations)."""
+    h, w = m.shape
+    if target >= h:
+        return m
+    yi = (np.arange(target) * h // target).clip(0, h - 1)
+    xi = (np.arange(target) * w // target).clip(0, w - 1)
+    return m[np.ix_(yi, xi)]
+
+
+def build_cost_inputs(name: str, *, batch: int = BATCH
+                      ) -> Tuple[List[cm.ConvSpec], List[cm.LayerTrace]]:
+    """Full-geometry ConvSpecs + traces with measured densities."""
+    acts, dens = capture_traces(name)
+    full = build_cnn(name, image_size=224, width=1.0, num_classes=1000)
+    specs = full.conv_specs(batch=batch)
+
+    # walk specs in order; the producer of spec i's input is spec i-1 (for
+    # sequential nets) — x_density keyed by the previous captured layer.
+    traces: List[cm.LayerTrace] = []
+    prev_name = None
+    for s in specs:
+        x_d = dens.get(prev_name, 1.0) if s.input_is_relu else 1.0
+        own_d = dens.get(s.name, 0.5)
+        g_in = own_d if (s.output_feeds_relu and not s.has_bn) else 1.0
+        # spatial BP work map from the input activation mask
+        bp_map = None
+        if prev_name in acts and s.input_is_relu:
+            a = acts[prev_name]
+            nz = (a[0] != 0).sum(axis=-1).astype(np.float64)  # (H, W)
+            bp_map = _resample_map(nz, s.h)
+        fp_map = None
+        if prev_name in acts:
+            a = acts[prev_name]
+            nz = (a[0] != 0).sum(axis=-1).astype(np.float64)
+            fp_map = _resample_map(nz, s.u)
+        traces.append(cm.LayerTrace(
+            x_density=x_d, g_in_density=g_in, out_mask_density=x_d,
+            fp_active_map=fp_map, bp_active_map=bp_map))
+        prev_name = s.name
+    return specs, traces
+
+
+def layer_speedups(name: str, scenarios=("DC", "IN", "IN_OUT", "IN_OUT_WR"),
+                   phase: str = "bp") -> Dict[str, List[float]]:
+    """Per-layer speedup of each scenario over DC for the given phase."""
+    specs, traces = build_cost_inputs(name)
+    out: Dict[str, List[float]] = {s: [] for s in scenarios}
+    out["layer"] = [s.name for s in specs]
+    for spec, trace in zip(specs, traces):
+        base = getattr(cm.layer_cost(spec, trace, "DC"), phase).cycles
+        for sc in scenarios:
+            c = getattr(cm.layer_cost(spec, trace, sc), phase).cycles
+            out[sc].append(base / c if c > 0 else 1.0)
+    return out
+
+
+def network_totals(name: str) -> Dict[str, Dict[str, float]]:
+    specs, traces = build_cost_inputs(name)
+    return {sc: cm.network_cost(specs, traces, sc)
+            for sc in ("DC", "IN", "IN_OUT", "IN_OUT_WR")}

@@ -1,0 +1,72 @@
+"""§Roofline renderer: reads the dry-run JSONL and emits the per-cell
+roofline table (markdown + CSV rows) used by EXPERIMENTS.md."""
+from __future__ import annotations
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import json
+from typing import List, Optional, Tuple
+
+_DIR = os.path.join(os.path.dirname(__file__), "results")
+_FINAL = os.path.join(_DIR, "dryrun_final.jsonl")
+RESULTS = _FINAL if os.path.exists(_FINAL) else os.path.join(_DIR, "dryrun.jsonl")
+
+
+def load(path: str = RESULTS, mesh: Optional[str] = "16x16") -> List[dict]:
+    recs = {}
+    if not os.path.exists(path):
+        return []
+    for line in open(path):
+        r = json.loads(line)
+        if r.get("skipped") or not r.get("ok"):
+            continue
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs[(r["arch"], r["shape"], r["mesh"])] = r   # latest wins
+    return list(recs.values())
+
+
+def roofline_rows(path: str = RESULTS, mesh: str = "16x16") -> Tuple[List[dict], str]:
+    rows = []
+    worst = (None, 1.0)
+    for r in load(path, mesh):
+        rl = r["roofline"]
+        mem = r.get("memory", {})
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "compute_s": round(rl["compute_s"], 6),
+            "memory_s": round(rl["memory_s"], 6),
+            "collective_s": round(rl["collective_s"], 6),
+            "dominant": rl["dominant"],
+            "useful_flop_fraction":
+                rl["useful_flop_fraction"] and round(rl["useful_flop_fraction"], 3),
+            "roofline_fraction":
+                rl["roofline_fraction"] and round(rl["roofline_fraction"], 4),
+            "live_gib": round(mem.get("live_bytes", 0) / 2 ** 30, 2),
+            "fits_16g": mem.get("fits_16g"),
+        })
+        rf = rl.get("roofline_fraction")
+        if r["shape"] == "train_4k" and rf and rf < worst[1]:
+            worst = (f"{r['arch']}×{r['shape']}", rf)
+    rows.sort(key=lambda x: (x["arch"], x["shape"]))
+    return rows, f"cells={len(rows)} worst_train_rf={worst[0]}@{worst[1]}"
+
+
+def markdown_table(path: str = RESULTS, mesh: str = "16x16") -> str:
+    rows, _ = roofline_rows(path, mesh)
+    hdr = ("| arch | shape | compute (s) | memory (s) | collective (s) | "
+           "dominant | useful-FLOP frac | roofline frac | live GiB |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"{r['dominant']} | {r['useful_flop_fraction']} | "
+            f"{r['roofline_fraction']} | {r['live_gib']} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

@@ -1,0 +1,44 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import csv
+import io
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def main() -> None:
+    from benchmarks.figures import ALL_FIGURES
+    from benchmarks.kernel_audit import kernel_audit
+    from benchmarks.roofline import roofline_rows
+
+    benches = dict(ALL_FIGURES)
+    benches["kernel_audit"] = kernel_audit
+    benches["roofline_table"] = roofline_rows
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    print("name,us_per_call,derived")
+    for name, fn in benches.items():
+        t0 = time.time()
+        try:
+            rows, derived = fn()
+        except Exception as e:  # keep the harness running
+            print(f"{name},ERROR,{e!r}")
+            continue
+        us = (time.time() - t0) * 1e6
+        # persist full rows per table
+        if rows:
+            path = os.path.join(RESULTS_DIR, f"{name}.csv")
+            with open(path, "w", newline="") as f:
+                w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+                w.writeheader()
+                w.writerows(rows)
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Quickstart: the paper's gradient-output-sparsity technique in 60 lines.
+
+Builds a 3-layer ReLU MLP two ways — dense autodiff vs the fused
+sparse-backprop units (output+input block skipping, work-redistribution
+schedule) — and shows (1) gradients are EXACTLY equal (the technique is
+lossless), (2) how much compute the block bitmaps let the backward skip.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import IN_OUT_WR, relu_matmul
+from repro.core.sparsity import block_sparsity, relu_mask
+from repro.kernels import ref
+
+
+def main() -> None:
+    policy = IN_OUT_WR.with_(kernel_impl="pallas", block=(16, 16, 16))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((128, 64)), jnp.float32)
+    ws = [jnp.asarray(rng.standard_normal(s) / s[0] ** 0.5, jnp.float32)
+          for s in [(64, 128), (128, 128), (128, 32)]]
+    # Trained ReLU nets develop dead units (the paper's WC sparsity,
+    # Fig. 7c); emulate that structure via a bias so the block bitmaps
+    # have teeth — benchmarks/kernel_audit.py quantifies capture vs
+    # structure on real traces.
+    bias = jnp.zeros((128,)).at[64:].set(-6.0)
+
+    def net_sparse(ws):
+        h = x @ ws[0] + bias                # first layer: raw input
+        h2 = relu_matmul(h, ws[1], policy)  # fused ReLU→GEMM, sparse bwd
+        h3 = relu_matmul(h2, ws[2], policy)
+        return (h3 ** 2).mean()
+
+    def net_dense(ws):
+        h = x @ ws[0] + bias
+        h = jnp.maximum(h, 0) @ ws[1]
+        h = jnp.maximum(h, 0) @ ws[2]
+        return (h ** 2).mean()
+
+    g_sparse = jax.grad(net_sparse)(ws)
+    g_dense = jax.grad(net_dense)(ws)
+    max_err = max(float(jnp.abs(a - b).max())
+                  for a, b in zip(g_sparse, g_dense))
+    print(f"max |grad_sparse - grad_dense| = {max_err:.2e}  (lossless)")
+
+    # what the backward pass skipped: block bitmap of the ReLU footprint
+    h1 = x @ ws[0] + bias
+    mask = relu_mask(h1)
+    bs = float(block_sparsity(mask, 16, 16))
+    es = float(jnp.mean(mask == 0))
+    print(f"layer-1 activation sparsity: element={es:.1%}, "
+          f"16x16-block={bs:.1%}")
+    print("→ the dX GEMM for layer 2 skipped "
+          f"{bs:.1%} of its output tiles (exact zeros by §3.2)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps on the
+deterministic synthetic token stream, with checkpoint/restart fault
+tolerance and the straggler detector live.
+
+The config is a 12L/768d/12H GQA transformer (~90M params incl. tied
+embeddings).  Optionally (--sparse-ffn) the FFN uses squared-ReLU routed
+through the paper's sparse-backprod units — the beyond-paper transformer
+application of the technique (loss curve is unchanged: the op is exact).
+
+Run:  PYTHONPATH=src python examples/train_lm.py --steps 300
+Resume after a kill:  same command — it restarts from the last checkpoint.
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.launch.train import train_loop
+
+LM100M = ModelConfig(
+    name="lm-100m",
+    family="dense",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=4,
+    d_ff=2048,
+    vocab_size=16384,
+    ffn_activation="silu_glu",
+    tie_embeddings=True,
+    dtype="float32",
+    q_chunk=128,
+    kv_chunk=128,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=2e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm100m_ckpt")
+    ap.add_argument("--sparse-ffn", action="store_true",
+                    help="squared-ReLU FFN through the sparse-bwd units")
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = LM100M
+    if args.sparse_ffn:
+        cfg = cfg.with_(ffn_activation="relu2", sparse_ffn_scenario="IN_OUT")
+    tcfg = TrainConfig(
+        learning_rate=args.lr, warmup_steps=20, total_steps=args.steps,
+        microbatches=args.microbatches, checkpoint_every=50,
+        keep_checkpoints=2)
+
+    import jax
+    n_params = sum(x.size for x in jax.tree.leaves(
+        jax.eval_shape(lambda: __import__("repro.models.transformer",
+                                          fromlist=["lm_init"]).lm_init(
+            jax.random.key(0), cfg))))
+    print(f"model: {cfg.name}  params={n_params/1e6:.1f}M  "
+          f"ffn={cfg.ffn_activation}")
+    out = train_loop(cfg, tcfg, batch_size=args.batch, seq_len=args.seq,
+                     steps=args.steps, ckpt_dir=args.ckpt_dir, resume=True)
+    print(f"first-10 mean loss {sum(out['losses'][:10])/10:.4f} → "
+          f"last-10 mean {sum(out['losses'][-10:])/10:.4f}  "
+          f"(resumed_from={out['resumed_from']}, "
+          f"stragglers={len(out['straggler'].flags)})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from .checkpoint import (latest_step, restore, save,  # noqa: F401
+                         restore_resharded)

@@ -1,0 +1,53 @@
+"""Execution policies — the paper's four evaluation scenarios as config.
+
+DC          dense compute (sparsity-agnostic baseline)
+IN          input sparsity only (prior work: CNVLUTIN/SparTANN class)
+IN_OUT      input + output sparsity (the paper's contribution)
+IN_OUT_WR   + work redistribution (paper's full system; on TPU this picks
+            the compacted work-queue kernel schedule)
+
+``kernel_impl`` selects how the skipping executes:
+  * "pallas"  — the Pallas kernels (interpret-mode on CPU, native on TPU);
+  * "xla_ref" — numerically identical pure-jnp path (dense compute + mask)
+                so CPU-bound examples/training run at XLA speed while the
+                cost model still accounts the skipped work.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsityPolicy:
+    use_input_sparsity_fp: bool = False   # FP: skip zero activation operands
+    use_input_sparsity_bp: bool = False   # BP: skip zero gradient operands
+    use_output_sparsity: bool = False     # BP: skip outputs the ReLU mask kills
+    work_redistribution: bool = False     # compacted work-queue schedule
+    block: Tuple[int, int, int] = (128, 128, 128)
+    kernel_impl: Literal["pallas", "xla_ref"] = "xla_ref"
+    interpret: Optional[bool] = None      # None → auto (CPU backend ⇒ True)
+
+    @property
+    def any_sparsity(self) -> bool:
+        return (
+            self.use_input_sparsity_fp
+            or self.use_input_sparsity_bp
+            or self.use_output_sparsity
+        )
+
+    def with_(self, **kw) -> "SparsityPolicy":
+        return dataclasses.replace(self, **kw)
+
+
+DC = SparsityPolicy()
+IN = SparsityPolicy(use_input_sparsity_fp=True, use_input_sparsity_bp=True)
+OUT = SparsityPolicy(use_output_sparsity=True)
+IN_OUT = SparsityPolicy(
+    use_input_sparsity_fp=True,
+    use_input_sparsity_bp=True,
+    use_output_sparsity=True,
+)
+IN_OUT_WR = IN_OUT.with_(work_redistribution=True)
+
+SCENARIOS = {"DC": DC, "IN": IN, "OUT": OUT, "IN_OUT": IN_OUT, "IN_OUT_WR": IN_OUT_WR}

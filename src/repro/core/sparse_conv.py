@@ -1,0 +1,210 @@
+"""The paper's fused CONV–ReLU unit, lowered to masked GEMMs via im2col.
+
+The paper's accelerator executes CONV as GEMM over the receptive field
+(K = C·R·S — its "synapse blocking at 1024" is K-blocking, §4.4).  We do the
+same: im2col the operand, run the block-sparse GEMM kernels, fold back.
+
+``relu_conv(x_pre, w)`` = conv2d(relu(x_pre), w), NHWC / RSCM layouts,
+with the same three skipping opportunities as core.sparse_linear:
+  FP  input sparsity of relu(x_pre) patches,
+  BP  output sparsity from σ'(x_pre) (survives BatchNorm *after* the conv),
+      + input sparsity of the incoming gradient patches,
+  WG  input sparsity on both operands.
+
+Exactness vs dense autodiff is asserted in tests for stride ∈ {1, 2} and
+padding ∈ {SAME, VALID}.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .policy import SparsityPolicy
+from .sparse_linear import _bitmap_padded, _mm
+
+
+def _pad_amounts(h: int, r: int, stride: int, padding: str) -> Tuple[int, int]:
+    if padding == "VALID":
+        return 0, 0
+    out = -(-h // stride)  # ceil
+    total = max((out - 1) * stride + r - h, 0)
+    return total // 2, total - total // 2
+
+
+def conv_out_size(h: int, r: int, stride: int, padding: str) -> int:
+    lo, hi = _pad_amounts(h, r, stride, padding)
+    return (h + lo + hi - r) // stride + 1
+
+
+def _im2col(x: jnp.ndarray, r: int, s: int, stride: int,
+            pad: Tuple[int, int, int, int]) -> jnp.ndarray:
+    """x: (N,H,W,C) -> (N, U, V, R*S*C) patches, (r, s, c)-ordered."""
+    n, h, w, c = x.shape
+    plo_h, phi_h, plo_w, phi_w = pad
+    xp = jnp.pad(x, ((0, 0), (plo_h, phi_h), (plo_w, phi_w), (0, 0)))
+    hp, wp = h + plo_h + phi_h, w + plo_w + phi_w
+    u = (hp - r) // stride + 1
+    v = (wp - s) // stride + 1
+    cols = []
+    for dr in range(r):
+        for ds in range(s):
+            cols.append(
+                jax.lax.slice(
+                    xp, (0, dr, ds, 0),
+                    (n, dr + (u - 1) * stride + 1, ds + (v - 1) * stride + 1, c),
+                    (1, stride, stride, 1),
+                )
+            )
+    patches = jnp.stack(cols, axis=3)          # (N,U,V,R*S,C)
+    return patches.reshape(n, u, v, r * s * c)
+
+
+def _dilate_hw(x: jnp.ndarray, stride: int) -> jnp.ndarray:
+    """Insert stride-1 zeros between spatial elements (for grad-input)."""
+    if stride == 1:
+        return x
+    n, h, w, c = x.shape
+    out = jnp.zeros((n, (h - 1) * stride + 1, (w - 1) * stride + 1, c), x.dtype)
+    return out.at[:, ::stride, ::stride, :].set(x)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def relu_conv(x_pre: jnp.ndarray, w: jnp.ndarray, stride: int, padding: str,
+              policy: SparsityPolicy):
+    """y = conv2d(relu(x_pre), w). x_pre: (N,H,W,C); w: (R,S,C,M)."""
+    y, _ = _relu_conv_fwd(x_pre, w, stride, padding, policy)
+    return y
+
+
+def _relu_conv_fwd(x_pre, w, stride, padding, policy: SparsityPolicy):
+    x = jnp.maximum(x_pre, jnp.zeros((), x_pre.dtype))
+    n, h, wd, c = x.shape
+    r, s, _, m = w.shape
+    plh = _pad_amounts(h, r, stride, padding)
+    plw = _pad_amounts(wd, s, stride, padding)
+    patches = _im2col(x, r, s, stride, (plh[0], plh[1], plw[0], plw[1]))
+    u, v = patches.shape[1], patches.shape[2]
+    pm = patches.reshape(n * u * v, r * s * c)
+    wm = w.reshape(r * s * c, m)
+    bm, bk, bn = policy.block
+    a_mask = None
+    if policy.use_input_sparsity_fp and policy.kernel_impl == "pallas":
+        a_mask = _bitmap_padded(pm.astype(jnp.float32), bm, bk)
+    y = _mm(pm, wm, None, a_mask, None, policy, x_pre.dtype)
+    return y.reshape(n, u, v, m), (x_pre, w)
+
+
+def _relu_conv_bwd(stride, padding, policy: SparsityPolicy, res, dy):
+    x_pre, w = res
+    n, h, wd, c = x_pre.shape
+    r, s, _, m = w.shape
+    u, v = dy.shape[1], dy.shape[2]
+    mask = (x_pre > 0)
+    x = jnp.where(mask, x_pre, jnp.zeros((), x_pre.dtype))
+    bm, bk, bn = policy.block
+    dy32 = dy.astype(jnp.float32)
+
+    # ---- dx_pre: full-correlation of dilated dy with flipped w, fused with
+    # the σ' Hadamard → OUTPUT sparsity on the (N·H·W, C) GEMM. ----
+    plh = _pad_amounts(h, r, stride, padding)
+    plw = _pad_amounts(wd, s, stride, padding)
+    dyd = _dilate_hw(dy32, stride)
+    hd, wdd = dyd.shape[1], dyd.shape[2]
+    # output spatial size must equal (h, wd):  pad_lo = r-1-fwd_pad_lo
+    pg_h_lo = r - 1 - plh[0]
+    pg_h_hi = h - (hd + pg_h_lo - r + 1) + 0  # solve for hi
+    pg_w_lo = s - 1 - plw[0]
+    pg_w_hi = wd - (wdd + pg_w_lo - s + 1)
+    gpatches = _im2col(dyd, r, s, 1, (pg_h_lo, pg_h_hi, pg_w_lo, pg_w_hi))
+    gm = gpatches.reshape(n * h * wd, r * s * m)
+    # w flipped spatially, (r, s, m, c) ordering to match patch layout
+    wt = jnp.flip(w, axis=(0, 1)).transpose(0, 1, 3, 2).reshape(r * s * m, c)
+    mask2d = mask.reshape(n * h * wd, c).astype(jnp.float32)
+    out_mask = _bitmap_padded(mask2d, bm, bn) if policy.use_output_sparsity else None
+    g_mask = _bitmap_padded(gm, bm, bk) if policy.use_input_sparsity_bp else None
+    dx = _mm(gm, wt.astype(jnp.float32), out_mask, g_mask, None, policy, jnp.float32)
+    dx_pre = (dx * mask2d).reshape(n, h, wd, c).astype(x_pre.dtype)
+
+    # ---- dW = patches(x)ᵀ @ dy — WG stage, input sparsity both sides ----
+    patches = _im2col(x, r, s, stride, (plh[0], plh[1], plw[0], plw[1]))
+    pm = patches.reshape(n * u * v, r * s * c).astype(jnp.float32)
+    dym = dy32.reshape(n * u * v, m)
+    pt = pm.T
+    pt_mask = _bitmap_padded(pt, bm, bk) if policy.use_input_sparsity_bp else None
+    dym_mask = _bitmap_padded(dym, bk, bn) if policy.use_input_sparsity_bp else None
+    dw = _mm(pt, dym, None, pt_mask, dym_mask, policy, jnp.float32)
+    return dx_pre, dw.reshape(r, s, c, m).astype(w.dtype)
+
+
+relu_conv.defvjp(_relu_conv_fwd, _relu_conv_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def conv(x: jnp.ndarray, w: jnp.ndarray, stride: int, padding: str,
+         policy: SparsityPolicy):
+    """Plain conv2d (no fused ReLU): FP/BP input sparsity only.
+
+    Used at MaxPool→CONV and input-layer boundaries where the paper notes
+    output sparsity is not applicable (Fig. 11 discussion).
+    """
+    y, _ = _conv_fwd(x, w, stride, padding, policy)
+    return y
+
+
+def _conv_fwd(x, w, stride, padding, policy):
+    # Reuse relu_conv's forward on a pre-activation that is already
+    # non-negative?  No — x may be signed.  Run the same im2col GEMM without
+    # the relu.
+    n, h, wd, c = x.shape
+    r, s, _, m = w.shape
+    plh = _pad_amounts(h, r, stride, padding)
+    plw = _pad_amounts(wd, s, stride, padding)
+    patches = _im2col(x, r, s, stride, (plh[0], plh[1], plw[0], plw[1]))
+    u, v = patches.shape[1], patches.shape[2]
+    pm = patches.reshape(n * u * v, r * s * c)
+    bm, bk, bn = policy.block
+    a_mask = None
+    if policy.use_input_sparsity_fp and policy.kernel_impl == "pallas":
+        a_mask = _bitmap_padded(pm.astype(jnp.float32), bm, bk)
+    y = _mm(pm, w.reshape(r * s * c, m), None, a_mask, None, policy, x.dtype)
+    return y.reshape(n, u, v, m), (x, w)
+
+
+def _conv_bwd(stride, padding, policy, res, dy):
+    x, w = res
+    # Identical to relu_conv's backward with an all-ones mask and no output
+    # sparsity; implement by temporarily treating x as its own "activation".
+    n, h, wd, c = x.shape
+    r, s, _, m = w.shape
+    u, v = dy.shape[1], dy.shape[2]
+    bm, bk, bn = policy.block
+    dy32 = dy.astype(jnp.float32)
+    plh = _pad_amounts(h, r, stride, padding)
+    plw = _pad_amounts(wd, s, stride, padding)
+    dyd = _dilate_hw(dy32, stride)
+    hd, wdd = dyd.shape[1], dyd.shape[2]
+    pg_h_lo = r - 1 - plh[0]
+    pg_h_hi = h - (hd + pg_h_lo - r + 1)
+    pg_w_lo = s - 1 - plw[0]
+    pg_w_hi = wd - (wdd + pg_w_lo - s + 1)
+    gpatches = _im2col(dyd, r, s, 1, (pg_h_lo, pg_h_hi, pg_w_lo, pg_w_hi))
+    gm = gpatches.reshape(n * h * wd, r * s * m)
+    wt = jnp.flip(w, axis=(0, 1)).transpose(0, 1, 3, 2).reshape(r * s * m, c)
+    g_mask = _bitmap_padded(gm, bm, bk) if policy.use_input_sparsity_bp else None
+    dx = _mm(gm, wt.astype(jnp.float32), None, g_mask, None, policy, x.dtype)
+    dx = dx.reshape(n, h, wd, c)
+
+    patches = _im2col(x, r, s, stride, (plh[0], plh[1], plw[0], plw[1]))
+    pm = patches.reshape(n * u * v, r * s * c).astype(jnp.float32)
+    dym = dy32.reshape(n * u * v, m)
+    pt = pm.T
+    pt_mask = _bitmap_padded(pt, bm, bk) if policy.use_input_sparsity_bp else None
+    dym_mask = _bitmap_padded(dym, bk, bn) if policy.use_input_sparsity_bp else None
+    dw = _mm(pt, dym, None, pt_mask, dym_mask, policy, jnp.float32)
+    return dx, dw.reshape(r, s, c, m).astype(w.dtype)
+
+
+conv.defvjp(_conv_fwd, _conv_bwd)

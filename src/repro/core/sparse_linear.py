@@ -1,0 +1,163 @@
+"""The paper's fused CONV/GEMM–ReLU unit for dense (GEMM) layers.
+
+``relu_matmul(x_pre, w)`` computes ``relu(x_pre) @ w`` with a custom VJP
+that realizes all three of the paper's skipping opportunities:
+
+  forward   : INPUT sparsity of relu(x_pre)        (skip zero activations)
+  backward  : dx_pre = (dy @ Wᵀ) ⊙ σ'(x_pre)
+              — OUTPUT sparsity: tiles σ' kills are never computed (works
+                even when a normalization layer sits between producer and
+                ReLU, the paper's headline case);
+              — INPUT sparsity of dy (zero gradient tiles skipped);
+  wt-grad   : dW = relu(x_pre)ᵀ @ dy — INPUT sparsity on both operands.
+
+The op is *exact*: its VJP equals dense autodiff of relu→matmul bit-for-bit
+on the masked-out entries and to accumulation-order tolerance elsewhere
+(property-tested in tests/test_sparse_grad.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from .policy import SparsityPolicy
+
+
+def _bitmap_padded(x2d: jnp.ndarray, b0: int, b1: int) -> jnp.ndarray:
+    m, n = x2d.shape
+    mp = (m + b0 - 1) // b0 * b0
+    np_ = (n + b1 - 1) // b1 * b1
+    if mp != m or np_ != n:
+        x2d = jnp.pad(x2d, ((0, mp - m), (0, np_ - n)))
+    return kref.block_any_nonzero(x2d, b0, b1)
+
+
+def _mm(a, b, out_mask, a_mask, b_mask, policy: SparsityPolicy, out_dtype):
+    """Dispatch a masked matmul through the policy's kernel impl."""
+    if policy.kernel_impl == "pallas":
+        return kops.masked_matmul(
+            a, b, out_mask=out_mask, a_mask=a_mask, b_mask=b_mask,
+            block=policy.block, out_dtype=out_dtype,
+            compact=policy.work_redistribution, interpret=policy.interpret,
+        )
+    # xla_ref: numerically-equivalent dense compute + masking.  The skipped
+    # work is accounted by core.costmodel, not saved on this backend.
+    out = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    if out_mask is not None:
+        bm, _, bn = policy.block
+        m, n = out.shape
+        em = kref.expand_block_mask(out_mask.astype(jnp.float32), bm, bn)
+        out = out * em[:m, :n]
+    return out.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# relu_matmul — the composable unit
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def act_matmul(x_pre: jnp.ndarray, w: jnp.ndarray, policy: SparsityPolicy,
+               act: str = "relu"):
+    """y = act(x_pre) @ w, sparse-aware in both passes. x_pre: (T, K), w: (K, N).
+
+    act ∈ {"relu", "relu2"}.  Both have σ'(z) = 0 ⇔ z ≤ 0, so the zero
+    FOOTPRINT of the backward Hadamard is the forward activation footprint
+    in either case (relu² is the beyond-paper transformer-FFN variant).
+    """
+    y, _ = _act_matmul_fwd(x_pre, w, policy, act)
+    return y
+
+
+def _act(x_pre, act: str):
+    r = jnp.maximum(x_pre, jnp.zeros((), x_pre.dtype))
+    return jnp.square(r) if act == "relu2" else r
+
+
+def _act_grad_multiplier(x_pre, act: str):
+    if act == "relu2":
+        return 2.0 * jnp.maximum(x_pre.astype(jnp.float32), 0.0)
+    return (x_pre > 0).astype(jnp.float32)
+
+
+def _act_matmul_fwd(x_pre, w, policy: SparsityPolicy, act: str):
+    x = _act(x_pre, act)
+    bm, bk, bn = policy.block
+    a_mask = None
+    if policy.use_input_sparsity_fp and policy.kernel_impl == "pallas":
+        a_mask = _bitmap_padded(x.astype(jnp.float32), bm, bk)
+    y = _mm(x, w, None, a_mask, None, policy, x_pre.dtype)
+    return y, (x_pre, w)
+
+
+def _act_matmul_bwd(policy: SparsityPolicy, act: str, res, dy):
+    x_pre, w = res
+    mult = _act_grad_multiplier(x_pre, act)       # zero exactly where x_pre<=0
+    x = _act(x_pre, act)
+    bm, bk, bn = policy.block
+    dy32 = dy.astype(jnp.float32)
+
+    # --- dx_pre = (dy @ Wᵀ) ⊙ σ'(x_pre): OUTPUT (+INPUT) sparsity ---
+    out_mask = _bitmap_padded(mult, bm, bn) \
+        if policy.use_output_sparsity else None
+    dy_mask = _bitmap_padded(dy32, bm, bk) \
+        if policy.use_input_sparsity_bp else None
+    dx = _mm(dy32, w.astype(jnp.float32).T, out_mask, dy_mask, None,
+             policy, jnp.float32)
+    dx_pre = (dx * mult).astype(x_pre.dtype)
+
+    # --- dW = xᵀ @ dy: INPUT sparsity on both operands (WG stage) ---
+    xt = x.astype(jnp.float32).T
+    xt_mask = _bitmap_padded(xt, bm, bk) if policy.use_input_sparsity_bp else None
+    dyb_mask = _bitmap_padded(dy32, bk, bn) if policy.use_input_sparsity_bp else None
+    dw = _mm(xt, dy32, None, xt_mask, dyb_mask, policy, jnp.float32)
+    return dx_pre, dw.astype(w.dtype)
+
+
+act_matmul.defvjp(_act_matmul_fwd, _act_matmul_bwd)
+
+
+def relu_matmul(x_pre: jnp.ndarray, w: jnp.ndarray, policy: SparsityPolicy):
+    """y = relu(x_pre) @ w — the paper's unit (alias of act_matmul)."""
+    return act_matmul(x_pre, w, policy, "relu")
+
+
+# ---------------------------------------------------------------------------
+# plain matmul with FP input sparsity (first layer of a chain, where the
+# input is raw data / dense): only the paper's FP-IN opportunity applies.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def matmul(x: jnp.ndarray, w: jnp.ndarray, policy: SparsityPolicy):
+    y, _ = _matmul_fwd(x, w, policy)
+    return y
+
+
+def _matmul_fwd(x, w, policy: SparsityPolicy):
+    bm, bk, bn = policy.block
+    a_mask = None
+    if policy.use_input_sparsity_fp and policy.kernel_impl == "pallas":
+        a_mask = _bitmap_padded(x.astype(jnp.float32), bm, bk)
+    y = _mm(x, w, None, a_mask, None, policy, x.dtype)
+    return y, (x, w)
+
+
+def _matmul_bwd(policy: SparsityPolicy, res, dy):
+    x, w = res
+    bm, bk, bn = policy.block
+    dy32 = dy.astype(jnp.float32)
+    dy_mask = _bitmap_padded(dy32, bm, bk) if policy.use_input_sparsity_bp else None
+    dx = _mm(dy32, w.astype(jnp.float32).T, None, dy_mask, None, policy, x.dtype)
+    xt = x.astype(jnp.float32).T
+    xt_mask = _bitmap_padded(xt, bm, bk) if policy.use_input_sparsity_bp else None
+    dyb_mask = _bitmap_padded(dy32, bk, bn) if policy.use_input_sparsity_bp else None
+    dw = _mm(xt, dy32, None, xt_mask, dyb_mask, policy, w.dtype)
+    return dx, dw
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

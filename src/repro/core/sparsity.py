@@ -1,0 +1,106 @@
+"""Sparsity footprints, bitmaps and statistics (paper §3).
+
+The paper's two structural views of a (C, H, W) feature map:
+
+  * Through-Channel (TC) sparsity — per spatial location, zeros along C.
+    Drives INPUT sparsity (the offset-lane indexing of §4.1 / Fig. 8a).
+  * Within-Channel (WC) sparsity — per channel, zeros across H×W.
+    Drives OUTPUT sparsity (the output bitmap of Fig. 9).
+
+On TPU both become *block bitmaps* over a 2-D GEMM view of the tensor
+(tokens/pixels × features).  This module provides the bitmap builders, the
+element↔block "capture rate" diagnostics quoted in DESIGN.md, and the
+footprint-identity check (forward activation footprint == backward gradient
+footprint across a ReLU), which is the paper's central theorem and is
+property-tested in tests/.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as kref
+
+# Re-exports so core is self-contained for callers.
+block_any_nonzero = kref.block_any_nonzero
+expand_block_mask = kref.expand_block_mask
+
+
+def relu_mask(z: jnp.ndarray) -> jnp.ndarray:
+    """σ'(z) for ReLU — the footprint captured in the forward pass.
+
+    Note ``z > 0`` (not >=): gradients at exactly 0 are zeroed, matching the
+    convention σ'(0)=0 used by the paper's eq. for σ' and by jax's
+    ``jnp.maximum`` vjp for the x==0 subgradient choice at x<=0.
+    """
+    return (z > 0).astype(z.dtype)
+
+
+def element_sparsity(x: jnp.ndarray) -> jnp.ndarray:
+    """Fraction of exactly-zero elements."""
+    return jnp.mean((x == 0).astype(jnp.float32))
+
+
+def block_sparsity(x2d: jnp.ndarray, bm: int, bn: int) -> jnp.ndarray:
+    """Fraction of fully-zero (bm, bn) blocks in a 2-D view."""
+    bitmap = block_any_nonzero(x2d, bm, bn)
+    return 1.0 - jnp.mean(bitmap.astype(jnp.float32))
+
+
+def capture_rate(x2d: jnp.ndarray, bm: int, bn: int) -> jnp.ndarray:
+    """Fraction of zero *elements* that live inside fully-zero *blocks*.
+
+    = (how much of the paper's element-granular skipping opportunity the
+    TPU block-granular schedule captures).  1.0 when zeros are perfectly
+    clustered; → 0 as zeros become i.i.d. at low sparsity.
+    """
+    zeros = (x2d == 0).astype(jnp.float32)
+    total_zero = zeros.sum()
+    bitmap = block_any_nonzero(x2d, bm, bn)
+    dead = expand_block_mask(1 - bitmap, bm, bn).astype(jnp.float32)
+    captured = (zeros * dead).sum()
+    return jnp.where(total_zero > 0, captured / total_zero, 1.0)
+
+
+def tc_sparsity(x_chw: jnp.ndarray) -> jnp.ndarray:
+    """Through-channel sparsity per (H, W) location: mean fraction of zero
+    channels (paper §4.2, Fig. 7a)."""
+    return jnp.mean((x_chw == 0).astype(jnp.float32), axis=0)
+
+
+def wc_sparsity(x_chw: jnp.ndarray) -> jnp.ndarray:
+    """Within-channel sparsity per channel: fraction of zero pixels
+    (paper §4.2, Fig. 7c)."""
+    c = x_chw.shape[0]
+    return jnp.mean((x_chw == 0).reshape(c, -1).astype(jnp.float32), axis=1)
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsityStats:
+    element: float
+    block: float
+    capture: float
+
+    @staticmethod
+    def of(x2d: jnp.ndarray, bm: int, bn: int) -> "SparsityStats":
+        return SparsityStats(
+            element=float(element_sparsity(x2d)),
+            block=float(block_sparsity(x2d, bm, bn)),
+            capture=float(capture_rate(x2d, bm, bn)),
+        )
+
+
+def footprints_identical(fwd_act: jnp.ndarray, bwd_grad_pre: jnp.ndarray) -> bool:
+    """Paper §3.2: zeros of relu(z) ⊇ zeros of δ_pre = δ_post ⊙ σ'(z).
+
+    Every location where the forward activation is zero must have zero
+    pre-activation gradient (δ can have *extra* zeros where δ_post happens
+    to be 0 — the containment is one-directional, which is exactly what
+    makes the forward footprint a safe skip-list).
+    """
+    fwd_zero = fwd_act == 0
+    grad_nonzero = bwd_grad_pre != 0
+    return bool(jnp.logical_not(jnp.any(fwd_zero & grad_nonzero)))

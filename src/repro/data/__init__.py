@@ -1,0 +1,2 @@
+from .pipeline import (ImageSynthetic, LMSynthetic, DataState,  # noqa: F401
+                       lm_batch, image_batch)

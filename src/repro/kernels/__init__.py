@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the gradient-output-sparsity technique.
+
+Layout (per kernel): <name>.py — pl.pallas_call + BlockSpec tiling;
+ops.py — jit'd public wrappers; ref.py — pure-jnp oracles.
+"""
+from . import ops, ref  # noqa: F401
+from .ops import (  # noqa: F401
+    masked_matmul,
+    relu_bwd_masked,
+    relu_encode,
+    weight_grad_masked,
+)

@@ -1,0 +1,211 @@
+"""Public, jit-friendly wrappers around the Pallas kernels.
+
+Handles:
+  * automatic interpret-mode selection (CPU backend → interpret=True, so the
+    whole framework is testable in this container while targeting TPU),
+  * block-alignment padding (MXU-aligned defaults bm=bk=bn=128; padded
+    blocks are marked inactive so they are skipped, not computed),
+  * host-side bitmap derivation from dense operands / ReLU masks,
+  * the compact (work-redistribution) launch path, including the active-
+    coordinate queue construction and the scatter back to dense layout.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .masked_matmul import compact_masked_matmul_kernel, masked_matmul_kernel
+from .relu_encode import relu_encode_kernel
+
+# MXU-native tile. Tests sweep smaller tiles in interpret mode.
+DEFAULT_BLOCK = (128, 128, 128)
+
+
+def _use_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jnp.ndarray, m: int, n: int) -> jnp.ndarray:
+    pm, pn = m - x.shape[0], n - x.shape[1]
+    if pm == 0 and pn == 0:
+        return x
+    return jnp.pad(x, ((0, pm), (0, pn)))
+
+
+def _ceil_to(v: int, b: int) -> int:
+    return (v + b - 1) // b * b
+
+
+def _block_bitmap(x: jnp.ndarray, bm: int, bn: int) -> jnp.ndarray:
+    return ref.block_any_nonzero(x, bm, bn)
+
+
+def _ones_bitmap(nb0: int, nb1: int) -> jnp.ndarray:
+    return jnp.ones((nb0, nb1), jnp.int32)
+
+
+def masked_matmul(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    out_mask: Optional[jnp.ndarray] = None,
+    a_mask: Optional[jnp.ndarray] = None,
+    b_mask: Optional[jnp.ndarray] = None,
+    *,
+    block: Tuple[int, int, int] = DEFAULT_BLOCK,
+    out_dtype=jnp.float32,
+    compact: bool = False,
+    max_active_blocks: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Block-sparse ``a @ b`` with output/input sparsity skipping.
+
+    Masks are block bitmaps (see kernels docstring); ``None`` means dense on
+    that axis pair.  Result equals ``(a @ b) * expand(out_mask)`` exactly.
+
+    ``compact=True`` routes through the work-redistribution schedule: the
+    grid walks only active output tiles (queue capacity
+    ``max_active_blocks``, default = all tiles).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bk, bn = block
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    ni, nk, nj = mp // bm, kp // bk, np_ // bn
+
+    a_p = _pad_to(a, mp, kp)
+    b_p = _pad_to(b, kp, np_)
+
+    def _pad_mask(mask, nb0, nb1):
+        if mask is None:
+            return _ones_bitmap(nb0, nb1)
+        mask = mask.astype(jnp.int32)
+        p0, p1 = nb0 - mask.shape[0], nb1 - mask.shape[1]
+        if p0 or p1:
+            mask = jnp.pad(mask, ((0, p0), (0, p1)))
+        return mask
+
+    om = _pad_mask(out_mask, ni, nj)
+    am = _pad_mask(a_mask, ni, nk)
+    bmask = _pad_mask(b_mask, nk, nj)
+
+    itp = _use_interpret(interpret)
+    if compact:
+        s_cap = max_active_blocks if max_active_blocks is not None else ni * nj
+        # Active-queue construction: stable-order the coordinates of set
+        # bits to the front (the WDU's "lexicographically smallest state
+        # tuple first" order is row-major (i, j) — identical here).
+        flat = om.reshape(-1)
+        order = jnp.argsort(-flat, stable=True)  # active tiles first
+        order = order[:s_cap]
+        ii = (order // nj).astype(jnp.int32)
+        jj = (order % nj).astype(jnp.int32)
+        n_active = jnp.minimum(flat.sum(), s_cap).reshape(1)
+        compacted = compact_masked_matmul_kernel(
+            a_p, b_p, ii, jj, n_active, am, bmask,
+            bm=bm, bk=bk, bn=bn, out_dtype=out_dtype, interpret=itp,
+        )
+        # Scatter the queue back to dense tile layout.  Padding steps carry
+        # zero tiles at coords (ii, jj) of dead queue slots — we direct dead
+        # slots at (0, 0) via scatter-ADD so they are no-ops.
+        live = (jnp.arange(s_cap) < n_active[0]).astype(out_dtype)
+        compacted = compacted * live[:, None, None]
+        ii = jnp.where(jnp.arange(s_cap) < n_active[0], ii, 0)
+        jj = jnp.where(jnp.arange(s_cap) < n_active[0], jj, 0)
+        out_tiles = jnp.zeros((ni, nj, bm, bn), out_dtype)
+        out_tiles = out_tiles.at[ii, jj].add(compacted)
+        out = out_tiles.transpose(0, 2, 1, 3).reshape(mp, np_)
+    else:
+        out = masked_matmul_kernel(
+            a_p, b_p, om, am, bmask,
+            bm=bm, bk=bk, bn=bn, out_dtype=out_dtype, interpret=itp,
+        )
+    return out[:m, :n]
+
+
+def relu_encode(
+    z: jnp.ndarray,
+    *,
+    block: Tuple[int, int] = (DEFAULT_BLOCK[0], DEFAULT_BLOCK[2]),
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused relu(z) + block bitmap.  Pads, launches, unpads."""
+    m, n = z.shape
+    bm, bn = block
+    mp, np_ = _ceil_to(m, bm), _ceil_to(n, bn)
+    z_p = _pad_to(z, mp, np_)
+    y, bitmap = relu_encode_kernel(z_p, bm=bm, bn=bn, interpret=_use_interpret(interpret))
+    return y[:m, :n], bitmap
+
+
+def relu_bwd_masked(
+    dy: jnp.ndarray,          # (M, K) δ_post — gradient arriving from layer above
+    w_t: jnp.ndarray,         # (K, N) Wᵀ of the producer layer
+    relu_mask: jnp.ndarray,   # (M, N) {0,1} σ'(z) captured in the forward pass
+    *,
+    block: Tuple[int, int, int] = DEFAULT_BLOCK,
+    use_input_sparsity: bool = True,
+    use_output_sparsity: bool = True,
+    compact: bool = False,
+    out_dtype=jnp.float32,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """δ_pre = (δ_post @ Wᵀ) ⊙ σ'(z) with block skipping — the paper's core op.
+
+    OUTPUT sparsity: tiles where σ'(z) is all-zero are never computed.
+    INPUT sparsity: K-tiles of δ_post that are all-zero are skipped.
+    Partially-live tiles are computed densely then Hadamard-masked — exact.
+    """
+    bm, bk, bn = block
+    m, n = relu_mask.shape
+    mp, np_ = _ceil_to(m, bm), _ceil_to(n, bn)
+    mask_p = _pad_to(relu_mask.astype(jnp.float32), mp, np_)
+    out_mask = _block_bitmap(mask_p, bm, bn) if use_output_sparsity else None
+
+    a_mask = None
+    if use_input_sparsity:
+        kp = _ceil_to(dy.shape[1], bk)
+        a_mask = _block_bitmap(_pad_to(dy.astype(jnp.float32), mp, kp), bm, bk)
+
+    out = masked_matmul(
+        dy, w_t, out_mask=out_mask, a_mask=a_mask, b_mask=None,
+        block=block, out_dtype=jnp.float32, compact=compact, interpret=interpret,
+    )
+    # Elementwise Hadamard for partially-live tiles (free on the ASIC's
+    # output bitmap; one VPU pass here).
+    return (out * relu_mask.astype(jnp.float32)).astype(out_dtype)
+
+
+def weight_grad_masked(
+    x_t: jnp.ndarray,        # (N, M) Xᵀ — activations (sparse post-ReLU)
+    dy: jnp.ndarray,         # (N, K) δ — gradient (sparse post-ReLU-Hadamard)
+    *,
+    block: Tuple[int, int, int] = DEFAULT_BLOCK,
+    use_input_sparsity: bool = True,
+    out_dtype=jnp.float32,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """dW = Xᵀ @ δ with INPUT sparsity on both operands (the paper's WG stage).
+
+    There is no output sparsity in WG — every weight gradient entry is
+    needed — but the contraction (batch·spatial) dimension tiles where
+    either operand is all-zero are skipped.
+    """
+    bm, bk, bn = block
+    a_mask = b_mask = None
+    if use_input_sparsity:
+        mp = _ceil_to(x_t.shape[0], bm)
+        kp = _ceil_to(x_t.shape[1], bk)
+        np_ = _ceil_to(dy.shape[1], bn)
+        a_mask = _block_bitmap(_pad_to(x_t.astype(jnp.float32), mp, kp), bm, bk)
+        b_mask = _block_bitmap(_pad_to(dy.astype(jnp.float32), kp, np_), bk, bn)
+    return masked_matmul(
+        x_t, dy, out_mask=None, a_mask=a_mask, b_mask=b_mask,
+        block=block, out_dtype=out_dtype, interpret=interpret,
+    )

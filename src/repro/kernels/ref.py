@@ -1,0 +1,111 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against (exact block
+semantics, not approximations): ``masked_matmul`` must be *bit-identical* to
+masking the dense product, because the paper's skipping is lossless.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Block bitmap helpers (shared by oracle and host-side wrappers)
+# ---------------------------------------------------------------------------
+
+def block_any_nonzero(x: jnp.ndarray, bm: int, bn: int) -> jnp.ndarray:
+    """(M, N) -> (M//bm, N//bn) int32 bitmap; 1 where a block has any nonzero."""
+    m, n = x.shape
+    assert m % bm == 0 and n % bn == 0, (x.shape, bm, bn)
+    xb = x.reshape(m // bm, bm, n // bn, bn)
+    return (jnp.abs(xb).max(axis=(1, 3)) > 0).astype(jnp.int32)
+
+
+def expand_block_mask(mask: jnp.ndarray, bm: int, bn: int) -> jnp.ndarray:
+    """(Mb, Nb) bitmap -> (Mb*bm, Nb*bn) elementwise {0,1} map."""
+    return jnp.repeat(jnp.repeat(mask, bm, axis=0), bn, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# masked_matmul oracle
+# ---------------------------------------------------------------------------
+
+def masked_matmul(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    out_mask: Optional[jnp.ndarray] = None,   # (M//bm, N//bn) int32/bool
+    a_mask: Optional[jnp.ndarray] = None,     # (M//bm, K//bk)
+    b_mask: Optional[jnp.ndarray] = None,     # (K//bk, N//bn)
+    *,
+    bm: int,
+    bk: int,
+    bn: int,
+    out_dtype=jnp.float32,
+) -> jnp.ndarray:
+    """Oracle for the block-sparse GEMM.
+
+    out[i, j] (block) = sum_k a[i, k] @ b[k, j]
+        over k where a_mask[i, k] and b_mask[k, j] are both set,
+        and only if out_mask[i, j] is set (else exact zeros).
+
+    Implemented by zeroing the *operand blocks* the kernel would skip, then
+    doing a dense matmul — which is exactly the arithmetic the kernel
+    performs, so results must match to the bit (same accumulation order not
+    required: we compare with allclose at dtype-appropriate tolerance, and
+    bit-exactness holds for the masked-out entries which must be exactly 0).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    if a_mask is not None:
+        af = af * expand_block_mask(a_mask.astype(jnp.float32), bm, bk)
+    if b_mask is not None:
+        bf = bf * expand_block_mask(b_mask.astype(jnp.float32), bk, bn)
+    out = af @ bf
+    if out_mask is not None:
+        # Skipped output blocks are exact zeros.
+        out = out * expand_block_mask(out_mask.astype(jnp.float32), bm, bn)
+    return out.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# relu_encode oracle
+# ---------------------------------------------------------------------------
+
+def relu_encode(z: jnp.ndarray, *, bm: int, bn: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused forward ReLU + block-bitmap encode.
+
+    Returns (relu(z), bitmap) where bitmap[i, j] == 1 iff block (i, j) of
+    relu(z) contains at least one strictly positive element.  The bitmap is
+    the WC-sparsity structure of §3/§4 of the paper, at MXU-block granularity.
+    """
+    y = jnp.maximum(z, jnp.zeros((), dtype=z.dtype))
+    return y, block_any_nonzero(y, bm, bn)
+
+
+# ---------------------------------------------------------------------------
+# relu_bwd_masked oracle: the full δ_pre producer (GEMM + Hadamard) fused.
+# ---------------------------------------------------------------------------
+
+def relu_bwd_masked(
+    dy: jnp.ndarray,           # (M, K) incoming gradient δ_post (already dense or sparse)
+    w_t: jnp.ndarray,          # (K, N) transposed weight
+    relu_mask: jnp.ndarray,    # (M, N) {0,1} — σ'(z) captured in the forward pass
+    *,
+    bm: int,
+    bk: int,
+    bn: int,
+    out_dtype=jnp.float32,
+) -> jnp.ndarray:
+    """δ_pre = (δ_post @ Wᵀ) ⊙ σ'(z), computed with output-sparsity skipping.
+
+    The oracle is the plain dense expression; the kernel must match it
+    exactly, because skipped blocks are exactly the all-zero blocks of
+    σ'(z).
+    """
+    out = (dy.astype(jnp.float32) @ w_t.astype(jnp.float32)) * relu_mask.astype(jnp.float32)
+    return out.astype(out_dtype)

@@ -1,0 +1,53 @@
+"""Fused ReLU forward + block-bitmap encode Pallas kernel.
+
+The paper's Encoder unit (§4.1, Fig. 8a) produces non-zero offset indices of
+a freshly computed feature map once per layer, amortized over O(M·k²) reuse.
+The TPU analogue emits, in the same pass that applies the ReLU, the
+block-granular bitmap that the backward pass will consume for OUTPUT
+sparsity — so sparsity metadata is a free byproduct of the forward pass,
+exactly as in the paper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+
+def _relu_encode_kernel(z_ref, y_ref, bm_ref):
+    y = jnp.maximum(z_ref[...], jnp.zeros((), dtype=z_ref.dtype))
+    y_ref[...] = y
+    bm_ref[0, 0] = jnp.any(y > 0).astype(jnp.int32)
+
+
+def relu_encode_kernel(
+    z: jnp.ndarray,
+    *,
+    bm: int,
+    bn: int,
+    interpret: bool = False,
+):
+    """Returns (relu(z), bitmap) with bitmap shape (M//bm, N//bn) int32."""
+    m, n = z.shape
+    assert m % bm == 0 and n % bn == 0, (z.shape, bm, bn)
+    ni, nj = m // bm, n // bn
+    fn = pl.pallas_call(
+        _relu_encode_kernel,
+        grid=(ni, nj),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), z.dtype),
+            jax.ShapeDtypeStruct((ni, nj), jnp.int32),
+        ],
+        interpret=interpret,
+    )
+    return fn(z)

@@ -1,0 +1,370 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware:
+  * jax.jit(step, in_shardings, out_shardings).lower(**ShapeDtypeStructs)
+    must compile for the 16×16 single-pod mesh AND the 2×16×16 multi-pod
+    mesh, for every cell;
+  * compiled.memory_analysis() proves per-device fit (16 GB v5e budget);
+  * compiled.cost_analysis() + collective parsing feed §Roofline.
+
+Results stream to JSONL under benchmarks/results/.
+
+NOTE the XLA_FLAGS assignment above MUST precede any jax import (device
+count locks at first backend init) — which is why this module sets it
+before its own docstring-adjacent imports and why nothing else in the
+repo sets it globally.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ALL_SHAPES, ARCHS, SMOKE_ARCHS, runs_cell
+from repro.configs.base import ShapeConfig, TrainConfig
+from repro.configs.registry import decode_input_specs, train_input_specs
+from repro.launch import flops as aflops
+from repro.launch import hlo_analysis as ha
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_decode_step, make_prefill_step, make_train_step
+from repro.models.transformer import lm_init
+from repro.optim.optimizer import OptConfig, adamw_init
+from repro.sharding import partition, sharding_rules
+
+HBM_PER_CHIP = 16 * 1024 ** 3        # v5e
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "results")
+
+
+def _eval_shapes(fn, *args, **kw):
+    return jax.eval_shape(fn, *args, **kw)
+
+
+def pick_microbatches(cfg, shape: ShapeConfig, mesh) -> int:
+    """Grad-accum splits so per-shard live tokens stay ~8k (activation
+    footprint control for the ≥100B configs)."""
+    if shape.kind != "train":
+        return 1
+    dp = partition.axis_size(mesh, partition.dp_axis_names(mesh))
+    local_seqs = max(1, shape.global_batch // dp)
+    tokens_per_seq = shape.seq_len
+    target = 8192
+    mb = max(1, (local_seqs * tokens_per_seq) // target)
+    while local_seqs % mb != 0:
+        mb -= 1
+    return max(1, mb)
+
+
+def lower_cell(arch: str, cfg, shape: ShapeConfig, *, multi_pod: bool,
+               smoke: bool = False, microbatches: Optional[int] = None,
+               fsdp: Optional[bool] = None, donate: bool = True,
+               pure_dp: bool = False, unroll_decode: bool = False,
+               opt_dtype: str = "float32", shard_stash: bool = False,
+               tag: str = "baseline") -> Dict[str, Any]:
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+
+    if unroll_decode and shape.kind == "decode":
+        cfg = cfg.with_(scan_unroll=4096)   # full unroll of the layer scan
+
+    params_shapes = _eval_shapes(lambda: lm_init(jax.random.key(0), cfg))
+    n_params = float(sum(np.prod(l.shape) for l in jax.tree.leaves(params_shapes)))
+    n_active = ha.active_param_count(params_shapes, cfg)
+    if fsdp is None:
+        fsdp = n_params > 8e9
+    if pure_dp:
+        fsdp = False
+    # validated defaults for ≥8B cells (see §Perf iteration log):
+    # bf16 Adam moments (args −28%) and model-sharded remat stash.
+    if n_params > 8e9 and shape.kind == "train":
+        if opt_dtype == "float32":
+            opt_dtype = "bfloat16"
+        shard_stash = True
+
+    if pure_dp:
+        # small-arch mode: replicate params, use EVERY mesh axis as data
+        # parallelism (TP collectives for a <1B model dwarf its compute).
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        all_axes = tuple(mesh.axis_names)
+        p_sh = jax.tree.map(
+            lambda l: NamedSharding(mesh, P(*([None] * len(l.shape)))),
+            params_shapes)
+        rules = {"act_btd": P(all_axes, None, None)}
+    else:
+        p_sh = partition.params_shardings(params_shapes, mesh, fsdp=fsdp)
+        rules = partition.activation_rules(mesh)
+        # EP buffer constraint only when the expert count divides the model
+        # axis — otherwise the forced resharding of the dispatch scatter
+        # REGRESSES memory (measured: grok-1 68→107 GiB; iteration log).
+        if shard_stash:
+            from jax.sharding import PartitionSpec as _P
+            rules["act_stash"] = _P(partition.dp_axis_names(mesh), None,
+                                    "model")
+        # manual sharded embedding lookup (see transformer._embed_lookup)
+        rules["__mesh__"] = mesh
+        rules["embed_vocab_axis"] = "model"
+
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape.name, "kind": shape.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips, "params_b": n_params / 1e9,
+        "active_params_b": n_active / 1e9, "fsdp": bool(fsdp),
+        "tag": tag, "pure_dp": pure_dp,
+        "schedule": cfg.attn_schedule,
+    }
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    dp_axes_all = tuple(mesh.axis_names) if pure_dp \
+        else partition.dp_axis_names(mesh)
+
+    def _batch_sh(batch_sds):
+        if pure_dp:
+            def one(l):
+                sh = tuple(l.shape)
+                n = partition.axis_size(mesh, dp_axes_all)
+                spec = [None] * len(sh)
+                if sh and sh[0] % n == 0:
+                    spec[0] = dp_axes_all
+                return NamedSharding(mesh, P(*spec))
+            return jax.tree.map(one, batch_sds)
+        return partition.to_shardings(
+            partition.batch_pspecs(batch_sds, mesh), mesh)
+
+    with mesh, sharding_rules(rules):
+        if shape.kind == "train":
+            mb = microbatches or pick_microbatches(cfg, shape, mesh)
+            rec["microbatches"] = mb
+            opt_cfg = OptConfig()
+            _mdt = jnp.bfloat16 if opt_dtype == "bfloat16" else jnp.float32
+            opt_shapes = _eval_shapes(
+                lambda p: adamw_init(p, moment_dtype=_mdt), params_shapes)
+            if pure_dp:
+                o_sh = jax.tree.map(
+                    lambda l: NamedSharding(mesh, P(*([None] * len(l.shape)))),
+                    opt_shapes)
+                g_pspecs = jax.tree.map(
+                    lambda l: P(*([None] * len(l.shape))), params_shapes)
+            else:
+                o_sh = partition.to_shardings(
+                    partition.opt_state_pspecs(opt_shapes, params_shapes,
+                                               mesh, fsdp=fsdp), mesh)
+                g_pspecs = partition.params_pspecs(params_shapes, mesh,
+                                                   fsdp=fsdp)
+            batch_sds = train_input_specs(cfg, shape)
+            b_sh = _batch_sh(batch_sds)
+            step = make_train_step(cfg, opt_cfg, microbatches=mb,
+                                   grad_pspecs=g_pspecs)
+            jitted = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                             donate_argnums=(0, 1) if donate else ())
+            lowered = jitted.lower(params_shapes, opt_shapes, batch_sds)
+        elif shape.kind == "prefill":
+            batch_sds = train_input_specs(cfg, shape)
+            b_sh = _batch_sh(batch_sds)
+            step = make_prefill_step(cfg)
+            jitted = jax.jit(step, in_shardings=(p_sh, b_sh))
+            lowered = jitted.lower(params_shapes, batch_sds)
+        else:  # decode
+            specs = decode_input_specs(cfg, shape)
+            c_sh = partition.to_shardings(
+                partition.cache_pspecs(specs["caches"], mesh), mesh)
+            tok_sh = partition.to_shardings(
+                partition.batch_pspecs(specs["token"], mesh), mesh)
+            step = make_decode_step(cfg)
+            args = [params_shapes, specs["token"], specs["caches"],
+                    specs["index"]]
+            in_sh = [p_sh, tok_sh, c_sh, None]
+            if "memory" in specs:
+                args.append(specs["memory"])
+                in_sh.append(partition.to_shardings(
+                    partition.batch_pspecs(specs["memory"], mesh), mesh))
+            jitted = jax.jit(step, in_shardings=tuple(in_sh),
+                             donate_argnums=(2,) if donate else ())
+            lowered = jitted.lower(*args)
+
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+        # ---- memory analysis (per device) ----
+        try:
+            ma = compiled.memory_analysis()
+            mem = {}
+            for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "alias_size_in_bytes",
+                      "generated_code_size_in_bytes"):
+                v = getattr(ma, f, None)
+                if v is not None:
+                    mem[f] = int(v)
+            live = mem.get("argument_size_in_bytes", 0) \
+                + mem.get("temp_size_in_bytes", 0) \
+                + mem.get("output_size_in_bytes", 0) \
+                - mem.get("alias_size_in_bytes", 0)
+            mem["live_bytes"] = int(live)
+            mem["fits_16g"] = bool(live < HBM_PER_CHIP)
+            rec["memory"] = mem
+        except Exception as e:  # pragma: no cover
+            rec["memory_error"] = repr(e)
+
+        # ---- HLO-static cost analysis (recorded for reference; while-loop
+        # bodies are counted once by XLA, so these UNDERCOUNT scanned work
+        # — see launch/flops.py docstring) ----
+        try:
+            ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0]
+            rec["hlo_static_flops"] = float(ca.get("flops", 0.0))
+            rec["hlo_static_bytes"] = float(ca.get("bytes accessed", 0.0))
+        except Exception as e:  # pragma: no cover
+            rec["cost_error"] = repr(e)
+
+        # ---- collective schedule from the compiled artifact ----
+        try:
+            text = compiled.as_text()
+            rec["collectives_static"] = ha.collective_bytes(text)
+            rec["hlo_lines"] = text.count("\n")
+        except Exception as e:  # pragma: no cover
+            rec["collective_error"] = repr(e)
+
+        # ---- analytic executed cost (primary; HLO-validated in tests) ----
+        if pure_dp:
+            dp_n, model_n = n_chips, 1
+        else:
+            dp_n = partition.axis_size(mesh, partition.dp_axis_names(mesh))
+            model_n = partition.axis_size(mesh, "model")
+        ac = aflops.analytic_cost(
+            cfg, shape, dp_n=dp_n, model_n=model_n,
+            microbatches=rec.get("microbatches", 1), fsdp=fsdp)
+        rec["analytic"] = {
+            "flops_per_device": ac.flops_per_device,
+            "hbm_bytes_per_device": ac.hbm_bytes_per_device,
+            "coll_bytes_per_device": ac.coll_bytes_per_device,
+            "detail": {k: float(v) for k, v in ac.detail.items()},
+        }
+        mf = ha.model_flops(cfg, shape, n_active)
+        rec["model_flops"] = mf
+        rl = ha.roofline_terms(
+            hlo_flops=ac.flops_per_device, hlo_bytes=ac.hbm_bytes_per_device,
+            coll_bytes=ac.coll_bytes_per_device, model_flops=mf)
+        rec["roofline"] = {
+            "compute_s": rl.compute_s, "memory_s": rl.memory_s,
+            "collective_s": rl.collective_s, "dominant": rl.dominant,
+            "useful_flop_fraction": rl.useful_flop_fraction(n_chips),
+            "roofline_fraction": rl.roofline_fraction(n_chips),
+        }
+    rec["ok"] = True
+    rec["total_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced configs (machinery validation)")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--fsdp", default=None, choices=[None, "on", "off"])
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--opt-dtype", default="float32",
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--shard-stash", action="store_true",
+                    help="model-shard the period-boundary remat stash")
+    ap.add_argument("--tag", default="baseline",
+                    help="label recorded per cell (perf-iteration log)")
+    ap.add_argument("--pure-dp", action="store_true",
+                    help="replicate params; all mesh axes as DP (small archs)")
+    ap.add_argument("--unroll-decode", action="store_true",
+                    help="fully unroll the layer scan in decode cells")
+    ap.add_argument("--schedule", default=None, choices=[None, "rect", "tri"])
+    ap.add_argument("--capacity-factor", type=float, default=None)
+    ap.add_argument("--device-limited", type=int, default=0,
+                    help="top-M expert device groups per token (deepseek-v2)")
+    ap.add_argument("--sparse-ffn", action="store_true",
+                    help="relu2 FFN through the paper's sparse-bwd units")
+    args = ap.parse_args()
+
+    table = SMOKE_ARCHS if args.smoke else ARCHS
+    archs = list(table) if args.arch == "all" else args.arch.split(",")
+    shapes = {s.name: s for s in ALL_SHAPES}
+    sel_shapes = list(shapes.values()) if args.shape == "all" \
+        else [shapes[s] for s in args.shape.split(",")]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    fsdp = None if args.fsdp is None else (args.fsdp == "on")
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    out_path = args.out or os.path.join(
+        RESULTS_DIR, f"dryrun{'_smoke' if args.smoke else ''}.jsonl")
+
+    n_ok = n_fail = n_skip = 0
+    with open(out_path, "a") as f:
+        for arch in archs:
+            cfg = table[arch]
+            if args.schedule:
+                cfg = cfg.with_(attn_schedule=args.schedule)
+            if args.capacity_factor is not None and cfg.moe is not None:
+                import dataclasses as _dc
+                cfg = cfg.with_(moe=_dc.replace(
+                    cfg.moe, capacity_factor=args.capacity_factor))
+            if args.device_limited and cfg.moe is not None:
+                import dataclasses as _dc
+                cfg = cfg.with_(moe=_dc.replace(
+                    cfg.moe, device_groups=16,
+                    top_groups=args.device_limited))
+            if args.sparse_ffn:
+                cfg = cfg.with_(ffn_activation="relu2",
+                                sparse_ffn_scenario="IN_OUT")
+            full_cfg = ARCHS[arch]          # applicability uses real arch
+            for shape in sel_shapes:
+                ok, why = runs_cell(full_cfg, shape)
+                for multi_pod in meshes:
+                    tag = f"{arch} × {shape.name} × {'2x16x16' if multi_pod else '16x16'}"
+                    if not ok:
+                        rec = {"arch": arch, "shape": shape.name,
+                               "mesh": "2x16x16" if multi_pod else "16x16",
+                               "skipped": True, "reason": why}
+                        print(f"[skip] {tag}: {why}")
+                        n_skip += 1
+                    else:
+                        try:
+                            rec = lower_cell(
+                                arch, cfg, shape, multi_pod=multi_pod,
+                                smoke=args.smoke,
+                                microbatches=args.microbatches, fsdp=fsdp,
+                                pure_dp=args.pure_dp,
+                                unroll_decode=args.unroll_decode,
+                                opt_dtype=args.opt_dtype,
+                                shard_stash=args.shard_stash,
+                                tag=args.tag)
+                            r = rec["roofline"]
+                            print(f"[ok]   {tag}: compile={rec['compile_s']}s "
+                                  f"live={rec.get('memory', {}).get('live_bytes', 0)/2**30:.2f}GiB "
+                                  f"dominant={r['dominant']} "
+                                  f"rf={r['roofline_fraction'] and round(r['roofline_fraction'], 3)}")
+                            n_ok += 1
+                        except Exception as e:
+                            rec = {"arch": arch, "shape": shape.name,
+                                   "mesh": "2x16x16" if multi_pod else "16x16",
+                                   "ok": False, "error": repr(e),
+                                   "traceback": traceback.format_exc()[-2000:]}
+                            print(f"[FAIL] {tag}: {e!r}")
+                            n_fail += 1
+                    f.write(json.dumps(rec) + "\n")
+                    f.flush()
+    print(f"\ndone: {n_ok} ok, {n_fail} failed, {n_skip} skipped → {out_path}")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

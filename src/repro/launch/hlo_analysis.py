@@ -1,0 +1,135 @@
+"""Post-compile HLO analysis: collective bytes, roofline terms.
+
+``cost_analysis()`` gives HLO FLOPs and HBM bytes but not collective
+traffic, so we parse the partitioned module text and sum the output-shape
+bytes of every collective op (shapes are already per-device after SPMD
+partitioning).  Roofline terms use the v5e-class constants from the brief:
+197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+# --- hardware constants (TPU v5e-class, per chip) ---
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one shape token: dtype[d0,d1,...]
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# HLO op line:  %name = <type> opcode(
+_OP_RE = re.compile(
+    r"=\s+(\(?[\w\[\],\{\}\s/#*]*?\)?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[\-a-z]*\(")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device bytes by collective category (output-shape accounting)."""
+    out = {c: 0 for c in _COLLECTIVES}
+    out["count"] = 0
+    for m in _OP_RE.finditer(hlo_text):
+        type_str, opcode = m.group(1), m.group(2)
+        out[opcode] += _shape_bytes(type_str)
+        out["count"] += 1
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops_per_device: float
+    hlo_bytes_per_device: float
+    collective_bytes_per_device: float
+    model_flops_total: Optional[float] = None
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def useful_flop_fraction(self, n_chips: int) -> Optional[float]:
+        """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is useful."""
+        if not self.model_flops_total:
+            return None
+        return self.model_flops_total / (self.hlo_flops_per_device * n_chips)
+
+    def roofline_fraction(self, n_chips: int) -> Optional[float]:
+        """useful FLOPs / (chips × peak × bound-time) — the §Perf score."""
+        if not self.model_flops_total or self.bound_s <= 0:
+            return None
+        return self.model_flops_total / (n_chips * PEAK_FLOPS * self.bound_s)
+
+
+def roofline_terms(*, hlo_flops: float, hlo_bytes: float,
+                   coll_bytes: float, model_flops: Optional[float] = None
+                   ) -> Roofline:
+    """All inputs are PER-DEVICE (post-SPMD shapes); model_flops is global."""
+    return Roofline(
+        compute_s=hlo_flops / PEAK_FLOPS,
+        memory_s=hlo_bytes / HBM_BW,
+        collective_s=coll_bytes / ICI_BW,
+        hlo_flops_per_device=hlo_flops,
+        hlo_bytes_per_device=hlo_bytes,
+        collective_bytes_per_device=coll_bytes,
+        model_flops_total=model_flops,
+    )
+
+
+def model_flops(cfg, shape, n_active_params: float) -> float:
+    """MODEL_FLOPS per the brief: 6·N·D (train) — N = active params.
+
+    prefill: 2·N·D; decode: 2·N·(batch tokens per step)."""
+    if shape.kind == "train":
+        return 6.0 * n_active_params * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n_active_params * shape.seq_len * shape.global_batch
+    return 2.0 * n_active_params * shape.global_batch
+
+
+def active_param_count(params_shapes, cfg) -> float:
+    """Total params, with MoE expert tensors scaled by top_k/n_experts."""
+    import jax
+    import numpy as np
+    total = 0.0
+    flat = jax.tree_util.tree_flatten_with_path(params_shapes)[0]
+    moe = getattr(cfg, "moe", None)
+    for kp, leaf in flat:
+        path = jax.tree_util.keystr(kp)
+        n = float(np.prod(leaf.shape))
+        if moe is not None and re.search(r"moe.*w_(gate|up|down)", path):
+            n *= moe.top_k / moe.n_experts
+        total += n
+    return total

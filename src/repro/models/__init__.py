@@ -1,0 +1,3 @@
+"""Model zoo: LM-family transformers (dense/MoE/SSM-hybrid/xLSTM/enc-dec)
+and the paper's five CNNs, all pure-functional JAX."""
+from . import attention, cnn, common, ffn, moe, ssm, transformer, xlstm  # noqa: F401

@@ -1,0 +1,334 @@
+"""Attention: GQA / sliding-window / MLA, training + cached-decode paths.
+
+Training attention is *blockwise* (flash-style online softmax over KV
+chunks) so that lowering never materializes the (T×T) score matrix — a
+hard requirement for the 32k prefill / 4k×256 train shapes.  Two schedules:
+
+  rect — every q-chunk scans every kv-chunk, masked.  Simple, but the HLO
+         carries ~2× the causal FLOPs.  (baseline)
+  tri  — q-chunks are unrolled and each scans only its causal prefix of
+         kv-chunks, so compiled FLOPs ≈ T²/2.  (used by §Perf hillclimb)
+
+MLA (DeepSeek-V2) caches the 512-d latent + shared rope key; decode uses
+the absorbed-projection form (q projected into latent space) so per-step
+cost is O(S·(r + d_rope)) per head rather than O(S·2·d_head).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_rope, dense_init
+
+Params = Dict[str, Any]
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    window: Optional[int] = None          # sliding-window size (None = full)
+    # MLA
+    use_mla: bool = False
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # blockwise schedule
+    q_chunk: int = 512
+    kv_chunk: int = 512
+    schedule: str = "rect"                # "rect" | "tri"
+    unroll: int = 1                       # kv-chunk scan unrolling
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: AttnConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 8)
+    if cfg.use_mla:
+        qd = cfg.qk_nope_dim + cfg.qk_rope_dim
+        return {
+            "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * qd, dtype),
+            "wdkv": dense_init(ks[1], cfg.d_model, cfg.kv_lora_rank, dtype),
+            "wkr": dense_init(ks[2], cfg.d_model, cfg.qk_rope_dim, dtype),
+            "wuk": dense_init(ks[3], cfg.kv_lora_rank,
+                              cfg.n_heads * cfg.qk_nope_dim, dtype),
+            "wuv": dense_init(ks[4], cfg.kv_lora_rank,
+                              cfg.n_heads * cfg.v_head_dim, dtype),
+            "wo": dense_init(ks[5], cfg.n_heads * cfg.v_head_dim,
+                             cfg.d_model, dtype),
+        }
+    return {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * cfg.head_dim, dtype),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * cfg.head_dim, dtype),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * cfg.head_dim, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * cfg.head_dim, cfg.d_model, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) multi-head attention core
+# ---------------------------------------------------------------------------
+
+def _chunk_attn_step(q, k, v, qpos, kpos, *, causal, window, scale):
+    """One (q-chunk × kv-chunk) tile: returns (scores-exp, max, out-partial).
+
+    q: (B, Tq, Hk, G, D); k/v: (B, Tk, Hk, D)."""
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    # base mask: padded keys carry kpos = 2**30 and must never attend
+    mask = jnp.broadcast_to((kpos < 2 ** 29)[None, :],
+                            (q.shape[1], k.shape[1]))
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1)                             # (B,H,G,Tq)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(mask[None, None, None], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
+    return m, l, o
+
+
+def blockwise_attention(
+    q: jnp.ndarray,                # (B, T, Hq, D)
+    k: jnp.ndarray,                # (B, S, Hk, D)
+    v: jnp.ndarray,                # (B, S, Hk, Dv)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+    schedule: str = "rect",
+    q_offset: int = 0,             # absolute position of q[0] (for caches)
+    unroll: int = 1,
+) -> jnp.ndarray:
+    b, t, hq, d = q.shape
+    _, s, hk, dv = v.shape
+    g = hq // hk
+    scale = d ** -0.5
+    q = q.reshape(b, t, hk, g, d)
+    q_chunk = min(q_chunk, t)
+    kv_chunk = min(kv_chunk, s)
+    nq = -(-t // q_chunk)
+    nk = -(-s // kv_chunk)
+    # pad to chunk multiples
+    tp, sp = nq * q_chunk, nk * kv_chunk
+    if tp != t:
+        q = jnp.pad(q, ((0, 0), (0, tp - t), (0, 0), (0, 0), (0, 0)))
+    if sp != s:
+        k = jnp.pad(k, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+    qpos_all = q_offset + jnp.arange(tp)
+    kpos_all = jnp.arange(sp)
+    kpos_all = jnp.where(kpos_all < s, kpos_all, 2 ** 30)  # pad keys masked out
+
+    kc = k.reshape(b, nk, kv_chunk, hk, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nk, kv_chunk, hk, dv).transpose(1, 0, 2, 3, 4)
+    kposc = kpos_all.reshape(nk, kv_chunk)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False, static_argnums=(2,))
+    def one_q_chunk(qi, qpos, n_kv):
+        """Online-softmax over the first ``n_kv`` kv chunks (static)."""
+        def body(carry, xs):
+            m_acc, l_acc, o_acc = carry
+            kj, vj, kpos = xs
+            m, l, o = _chunk_attn_step(qi, kj, vj, qpos, kpos,
+                                       causal=causal, window=window,
+                                       scale=scale)
+            m_new = jnp.maximum(m_acc, m)
+            c1 = jnp.exp(m_acc - m_new)
+            c2 = jnp.exp(m - m_new)
+            return (m_new, l_acc * c1 + l * c2,
+                    o_acc * c1[..., None] + o * c2[..., None]), None
+
+        m0 = jnp.full((b, hk, g, qi.shape[1]), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hk, g, qi.shape[1]), jnp.float32)
+        o0 = jnp.zeros((b, hk, g, qi.shape[1], dv), jnp.float32)
+        (m_f, l_f, o_f), _ = jax.lax.scan(
+            body, (m0, l0, o0), (kc[:n_kv], vc[:n_kv], kposc[:n_kv]),
+            unroll=unroll)
+        out = o_f / jnp.maximum(l_f[..., None], 1e-30)
+        return out                                       # (B,Hk,G,Tq,Dv)
+
+    outs = []
+    for i in range(nq):
+        qi = jax.lax.slice_in_dim(q, i * q_chunk, (i + 1) * q_chunk, axis=1)
+        qpos = jax.lax.slice_in_dim(qpos_all, i * q_chunk, (i + 1) * q_chunk)
+        if schedule == "tri" and causal and q_offset == 0:
+            # causal prefix only: kv chunks [0 .. ceil(((i+1)*q_chunk)/kv_chunk))
+            n_kv = min(nk, -(-((i + 1) * q_chunk) // kv_chunk))
+        else:
+            n_kv = nk
+        outs.append(one_q_chunk(qi, qpos, n_kv))
+    out = jnp.concatenate(outs, axis=3)                  # (B,Hk,G,Tp,Dv)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, tp, hq, dv)
+    return out[:, :t].astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA self-attention (training path)
+# ---------------------------------------------------------------------------
+
+def attn_apply(params: Params, x: jnp.ndarray, cfg: AttnConfig,
+               positions: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    b, t, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(t)
+    if cfg.use_mla:
+        return _mla_apply(params, x, cfg, positions)
+    q = (x @ params["wq"]).reshape(b, t, cfg.n_heads, cfg.head_dim)
+    k = (x @ params["wk"]).reshape(b, t, cfg.n_kv_heads, cfg.head_dim)
+    v = (x @ params["wv"]).reshape(b, t, cfg.n_kv_heads, cfg.head_dim)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    o = blockwise_attention(q, k, v, causal=True, window=cfg.window,
+                            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                            schedule=cfg.schedule, unroll=cfg.unroll)
+    return o.reshape(b, t, -1) @ params["wo"]
+
+
+def _mla_apply(params: Params, x: jnp.ndarray, cfg: AttnConfig,
+               positions: jnp.ndarray) -> jnp.ndarray:
+    b, t, _ = x.shape
+    h = cfg.n_heads
+    qd = cfg.qk_nope_dim + cfg.qk_rope_dim
+    q = (x @ params["wq"]).reshape(b, t, h, qd)
+    q_nope, q_rope = q[..., :cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    c_kv = x @ params["wdkv"]                              # (B,T,r)
+    k_rope = apply_rope((x @ params["wkr"])[:, :, None, :],
+                        positions, cfg.rope_theta)         # (B,T,1,dr)
+    k_nope = (c_kv @ params["wuk"]).reshape(b, t, h, cfg.qk_nope_dim)
+    vv = (c_kv @ params["wuv"]).reshape(b, t, h, cfg.v_head_dim)
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kf = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, t, h, cfg.qk_rope_dim))], axis=-1)
+    o = blockwise_attention(qf, kf, vv, causal=True,
+                            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                            schedule=cfg.schedule, unroll=cfg.unroll)
+    return o.reshape(b, t, -1) @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (encoder-decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attn_init(key, cfg: AttnConfig, d_memory: int, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * cfg.head_dim, dtype),
+        "wk": dense_init(ks[1], d_memory, cfg.n_kv_heads * cfg.head_dim, dtype),
+        "wv": dense_init(ks[2], d_memory, cfg.n_kv_heads * cfg.head_dim, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * cfg.head_dim, cfg.d_model, dtype),
+    }
+
+
+def cross_attn_apply(params: Params, x: jnp.ndarray, memory: jnp.ndarray,
+                     cfg: AttnConfig) -> jnp.ndarray:
+    b, t, _ = x.shape
+    s = memory.shape[1]
+    q = (x @ params["wq"]).reshape(b, t, cfg.n_heads, cfg.head_dim)
+    k = (memory @ params["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = (memory @ params["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    o = blockwise_attention(q, k, v, causal=False,
+                            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    return o.reshape(b, t, -1) @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Decode path with KV cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: AttnConfig, batch: int, max_len: int, dtype) -> Params:
+    if cfg.use_mla:
+        return {
+            "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+        }
+    length = min(max_len, cfg.window) if cfg.window else max_len
+    return {
+        "k": jnp.zeros((batch, length, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, length, cfg.n_kv_heads, cfg.head_dim), dtype),
+    }
+
+
+def attn_decode(params: Params, x: jnp.ndarray, cache: Params,
+                index: jnp.ndarray, cfg: AttnConfig) -> Tuple[jnp.ndarray, Params]:
+    """One-token decode. x: (B, 1, d); index: scalar current position."""
+    b = x.shape[0]
+    pos = jnp.full((1,), index)
+    if cfg.use_mla:
+        return _mla_decode(params, x, cache, index, cfg)
+    q = (x @ params["wq"]).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+    k = (x @ params["wk"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+    v = (x @ params["wv"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    slot = index % cache["k"].shape[1] if cfg.window else index
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, 1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, 1)
+    s_len = ck.shape[1]
+    kpos = jnp.arange(s_len)
+    if cfg.window:  # ring buffer: absolute position of each slot
+        wrap = (index // s_len) * s_len
+        kpos = jnp.where(kpos <= index % s_len, wrap + kpos, wrap - s_len + kpos)
+    valid = (kpos <= index) & (kpos >= 0)
+    if cfg.window:
+        valid &= index - kpos < cfg.window
+    g = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(b, 1, cfg.n_kv_heads, g, cfg.head_dim)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                   ck.astype(jnp.float32)) * cfg.head_dim ** -0.5
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, cv.astype(jnp.float32))
+    o = o.reshape(b, 1, -1).astype(x.dtype)
+    return o @ params["wo"], {"k": ck, "v": cv}
+
+
+def _mla_decode(params: Params, x: jnp.ndarray, cache: Params,
+                index: jnp.ndarray, cfg: AttnConfig) -> Tuple[jnp.ndarray, Params]:
+    """Absorbed-projection MLA decode: score/value both in latent space."""
+    b = x.shape[0]
+    h = cfg.n_heads
+    pos = jnp.full((1,), index)
+    qd = cfg.qk_nope_dim + cfg.qk_rope_dim
+    q = (x @ params["wq"]).reshape(b, 1, h, qd)
+    q_nope, q_rope = q[..., :cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+    c_new = x @ params["wdkv"]                             # (B,1,r)
+    kr_new = apply_rope((x @ params["wkr"])[:, :, None, :], pos,
+                        cfg.rope_theta)[:, :, 0, :]        # (B,1,dr)
+    ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), index, 1)
+    ckr = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), index, 1)
+    # absorb W_uk into q:  q_lat (B,1,H,r)
+    wuk = params["wuk"].reshape(cfg.kv_lora_rank, h, cfg.qk_nope_dim)
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
+                       wuk.astype(jnp.float32))
+    s_len = ckv.shape[1]
+    valid = jnp.arange(s_len) <= index
+    scores = (jnp.einsum("bqhr,bkr->bhqk", q_lat, ckv.astype(jnp.float32))
+              + jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
+                           ckr.astype(jnp.float32))) * (qd ** -0.5)
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhqk,bkr->bqhr", p, ckv.astype(jnp.float32))
+    wuv = params["wuv"].reshape(cfg.kv_lora_rank, h, cfg.v_head_dim)
+    o = jnp.einsum("bqhr,rhd->bqhd", o_lat, wuv.astype(jnp.float32))
+    o = o.reshape(b, 1, -1).astype(x.dtype)
+    return o @ params["wo"], {"c_kv": ckv, "k_rope": ckr}

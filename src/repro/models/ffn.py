@@ -1,0 +1,73 @@
+"""Feed-forward blocks: GLU (silu/gelu) and plain (relu/gelu/relu²).
+
+For ReLU-family activations the down-projection is routed through
+``core.act_matmul`` — the paper's fused unit — so the backward pass gets
+OUTPUT sparsity (tiles the activation mask kills are skipped) and the
+up-projection's backward gets INPUT sparsity from the now-sparse hidden
+gradient.  GLU activations are dense by construction (paper §2.1 scopes
+them out); they use plain matmuls.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import SparsityPolicy
+from repro.core.sparse_linear import act_matmul, matmul as sparse_matmul
+from .common import activation_fn, dense_init
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class FFNConfig:
+    d_model: int
+    d_ff: int
+    activation: str = "silu_glu"      # silu_glu|gelu_glu|relu|gelu|relu2
+    sparse_policy: Optional[SparsityPolicy] = None  # only for relu/relu2
+
+    @property
+    def is_glu(self) -> bool:
+        return self.activation.endswith("_glu")
+
+    @property
+    def relu_family(self) -> bool:
+        return self.activation in ("relu", "relu2")
+
+
+def ffn_init(key, cfg: FFNConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+    if cfg.is_glu:
+        return {
+            "w_gate": dense_init(ks[0], cfg.d_model, cfg.d_ff, dtype),
+            "w_up": dense_init(ks[1], cfg.d_model, cfg.d_ff, dtype),
+            "w_down": dense_init(ks[2], cfg.d_ff, cfg.d_model, dtype),
+        }
+    return {
+        "w_up": dense_init(ks[0], cfg.d_model, cfg.d_ff, dtype),
+        "w_down": dense_init(ks[1], cfg.d_ff, cfg.d_model, dtype),
+    }
+
+
+def ffn_apply(params: Params, x: jnp.ndarray, cfg: FFNConfig) -> jnp.ndarray:
+    """x: (..., d_model)."""
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    if cfg.is_glu:
+        act = activation_fn(cfg.activation.split("_")[0])
+        h = act(x2 @ params["w_gate"]) * (x2 @ params["w_up"])
+        y = h @ params["w_down"]
+    elif cfg.relu_family and cfg.sparse_policy is not None \
+            and cfg.sparse_policy.any_sparsity:
+        pol = cfg.sparse_policy
+        # up-projection: plain sparse matmul (its bwd consumes the sparse
+        # hidden gradient → INPUT sparsity), then the paper's fused unit.
+        h_pre = sparse_matmul(x2, params["w_up"], pol)
+        y = act_matmul(h_pre, params["w_down"], pol, cfg.activation)
+    else:
+        act = activation_fn(cfg.activation)
+        y = act(x2 @ params["w_up"]) @ params["w_down"]
+    return y.reshape(*shape[:-1], -1)

@@ -1,0 +1,167 @@
+"""Mamba-style selective SSM block (for jamba hybrid layers).
+
+Training path: chunked selective scan — sequential ``lax.scan`` over chunks
+carrying the (B, d_inner, d_state) hidden state, with an intra-chunk
+associative scan; the chunk body is rematerialized so the live footprint is
+O(B·chunk·d_inner·d_state / model-shards) instead of O(T·…).
+
+Decode path: single-step recurrence over (conv window, ssm state).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0         # 0 → ceil(d_model / 16)
+    chunk: int = 256
+    unroll: int = 1
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def rank(self) -> int:
+        return self.dt_rank or -(-self.d_model // 16)
+
+
+def ssm_init(key, cfg: SSMConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 8)
+    di, ds, r = cfg.d_inner, cfg.d_state, cfg.rank
+    a = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None], (di, 1))
+    return {
+        "w_in": dense_init(ks[0], cfg.d_model, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.d_conv, di), jnp.float32)
+                   * (cfg.d_conv ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "w_x": dense_init(ks[2], di, r + 2 * ds, dtype),
+        "w_dt": dense_init(ks[3], r, di, dtype),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "a_log": jnp.log(a),                       # (di, ds) f32
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "w_out": dense_init(ks[4], di, cfg.d_model, dtype),
+    }
+
+
+def _causal_conv(u: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 prefix: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv1d. u: (B,T,di); prefix: (B,d_conv-1,di)."""
+    dc = w.shape[0]
+    up = jnp.concatenate([prefix, u], axis=1)
+    out = sum(up[:, i:i + u.shape[1], :] * w[i][None, None, :]
+              for i in range(dc))
+    return out + b[None, None, :]
+
+
+def _selective_scan_chunked(dt, b_in, c_in, u, a, cfg: SSMConfig):
+    """y_t = C_tᵀ h_t with h_t = exp(dt_t·a) ⊙ h_{t-1} + dt_t·B_t·u_t.
+
+    The (B, ·, di, ds) discretized tensors are built PER CHUNK inside the
+    rematerialized body — materializing them at full T costs 3×
+    4 B·T·di·ds bytes (4.3 GiB/layer on jamba-1.5-large) and was the
+    dominant live buffer of the hybrid cells.  The ds axis is contracted
+    inside the body too, so only (B, ch, di) leaves the chunk.
+    dt: (B,T,di) f32;  b_in/c_in: (B,T,ds);  u: (B,T,di);  a: (di,ds)."""
+    b, t, di = dt.shape
+    ds = a.shape[1]
+    ch = min(cfg.chunk, t)
+    assert t % ch == 0, (t, ch)
+    nc = t // ch
+
+    def chunked(x):
+        return x.reshape(b, nc, ch, *x.shape[2:]).transpose(
+            1, 0, 2, *range(3, x.ndim + 1))
+
+    xs = (chunked(dt), chunked(b_in), chunked(c_in), chunked(u))
+
+    def chunk_body(h0, xs):
+        dt_c, b_c, c_c, u_c = xs
+        a_bar = jnp.exp(dt_c[..., None] * a[None, None])        # (B,ch,di,ds)
+        bx = (dt_c[..., None] * b_c.astype(jnp.float32)[:, :, None, :]
+              * u_c.astype(jnp.float32)[..., None])
+
+        def op(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        a_cum, b_cum = jax.lax.associative_scan(op, (a_bar, bx), axis=1)
+        h = a_cum * h0[:, None] + b_cum                         # (B,ch,di,ds)
+        y = jnp.einsum("bcds,bcs->bcd", h, c_c.astype(jnp.float32))
+        return h[:, -1], y
+
+    chunk_body = jax.checkpoint(chunk_body, prevent_cse=False)
+    h0 = jnp.zeros((b, di, ds), jnp.float32)
+    _, ys = jax.lax.scan(chunk_body, h0, xs, unroll=cfg.unroll)
+    return ys.transpose(1, 0, 2, 3).reshape(b, t, di)
+
+
+def ssm_apply(params: Params, x: jnp.ndarray, cfg: SSMConfig) -> jnp.ndarray:
+    """Training/prefill path. x: (B, T, d_model)."""
+    bsz, t, _ = x.shape
+    di, ds = cfg.d_inner, cfg.d_state
+    uz = x @ params["w_in"]
+    u, z = jnp.split(uz, 2, axis=-1)
+    prefix = jnp.zeros((bsz, cfg.d_conv - 1, di), u.dtype)
+    u = jax.nn.silu(_causal_conv(u, params["conv_w"], params["conv_b"], prefix))
+    proj = u @ params["w_x"]
+    dt_r, b_in, c_in = jnp.split(proj, [cfg.rank, cfg.rank + ds], axis=-1)
+    dt = jax.nn.softplus(dt_r.astype(jnp.float32) @ params["w_dt"].astype(jnp.float32)
+                         + params["dt_bias"])               # (B,T,di)
+    a = -jnp.exp(params["a_log"])                           # (di, ds)
+    y = _selective_scan_chunked(dt, b_in, c_in, u, a, cfg)
+    y = y + params["d_skip"][None, None] * u.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return y @ params["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def ssm_init_cache(cfg: SSMConfig, batch: int, dtype) -> Params:
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.d_state), jnp.float32),
+    }
+
+
+def ssm_decode(params: Params, x: jnp.ndarray, cache: Params,
+               cfg: SSMConfig) -> Tuple[jnp.ndarray, Params]:
+    """x: (B, 1, d_model)."""
+    bsz = x.shape[0]
+    di, ds = cfg.d_inner, cfg.d_state
+    uz = x @ params["w_in"]
+    u, z = jnp.split(uz, 2, axis=-1)                        # (B,1,di)
+    window = jnp.concatenate([cache["conv"], u], axis=1)    # (B,dc,di)
+    u1 = (window * params["conv_w"][None]).sum(axis=1, keepdims=True) \
+        + params["conv_b"][None, None]
+    u1 = jax.nn.silu(u1)
+    proj = u1 @ params["w_x"]
+    dt_r, b_in, c_in = jnp.split(proj, [cfg.rank, cfg.rank + ds], axis=-1)
+    dt = jax.nn.softplus(dt_r.astype(jnp.float32) @ params["w_dt"].astype(jnp.float32)
+                         + params["dt_bias"])               # (B,1,di)
+    a = -jnp.exp(params["a_log"])
+    a_bar = jnp.exp(dt[0 if False else ...][..., None] * a[None, None])[:, 0]
+    bx = (dt[..., None] * b_in.astype(jnp.float32)[:, :, None, :]
+          * u1.astype(jnp.float32)[..., None])[:, 0]        # (B,di,ds)
+    h = a_bar * cache["h"] + bx
+    y = jnp.einsum("bds,bs->bd", h, c_in[:, 0].astype(jnp.float32))[:, None]
+    y = y + params["d_skip"][None, None] * u1.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    new_cache = {"conv": window[:, 1:], "h": h}
+    return y @ params["w_out"], new_cache

@@ -1,0 +1,251 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM (scalar
+memory), used by the xlstm-350m architecture in an alternating stack.
+
+mLSTM: per-head matrix state C ∈ R^{Dh×Dh} with exponential input/forget
+gating and max-stabilizer m; parallelizable — we scan over chunks carrying
+(C, n, m) and use a decay-weighted intra-chunk attention-like form.
+
+sLSTM: per-unit scalar state with recurrent (block-diagonal per head)
+hidden feedback — inherently sequential; lax.scan over time.
+
+Simplifications vs the reference implementation (noted in DESIGN.md):
+learnable skip/gate initializations are default-valued; no causal-conv
+pre-layer on the mLSTM query/key path; group-norm replaced by per-head
+RMS normalization of the readout.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    d_model: int
+    n_heads: int
+    proj_factor_m: float = 2.0      # mLSTM up-projection
+    proj_factor_s: float = 4.0 / 3  # sLSTM FFN factor
+    chunk: int = 64
+    unroll: int = 1
+
+    @property
+    def d_inner_m(self) -> int:
+        return int(self.d_model * self.proj_factor_m)
+
+    @property
+    def head_dim_m(self) -> int:
+        return self.d_inner_m // self.n_heads
+
+    @property
+    def head_dim_s(self) -> int:
+        return self.d_model // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: XLSTMConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 8)
+    di = cfg.d_inner_m
+    return {
+        "w_up": dense_init(ks[0], cfg.d_model, 2 * di, dtype),
+        "w_q": dense_init(ks[1], di, di, dtype),
+        "w_k": dense_init(ks[2], di, di, dtype),
+        "w_v": dense_init(ks[3], di, di, dtype),
+        "w_i": dense_init(ks[4], di, cfg.n_heads, jnp.float32),
+        "w_f": dense_init(ks[5], di, cfg.n_heads, jnp.float32),
+        "b_i": jnp.zeros((cfg.n_heads,), jnp.float32),
+        "b_f": jnp.full((cfg.n_heads,), 3.0, jnp.float32),  # forget-open init
+        "w_down": dense_init(ks[6], di, cfg.d_model, dtype),
+    }
+
+
+def _mlstm_chunk(carry, xs, head_dim):
+    """Chunkwise-parallel mLSTM (decay-matrix form) for one chunk.
+
+    carry: (C (B,H,D,D), n (B,H,D), m (B,H)); xs: q,k,v (B,ch,H,D), i,f (B,ch,H)
+    """
+    C0, n0, m0 = carry
+    q, k, v, ig, fg = xs
+    b, ch, h, d = q.shape
+    logf = jax.nn.log_sigmoid(fg)                       # (B,ch,H)
+    cum_f = jnp.cumsum(logf, axis=1)                    # Σ_{s<=t} log f_s
+    # stabilizer: m_t = max(m_{t-1} + Σ log f, max_s(i_s + Σ_{u in (s,t]} log f))
+    a_val = ig + (cum_f[:, -1:, :] - cum_f)             # intra-chunk key decay→end
+    m_inter = m0 + cum_f[:, -1, :]                      # carry decay to chunk end
+    m_new = jnp.maximum(m_inter, a_val.max(axis=1))     # (B,H)
+
+    # intra-chunk pairwise decay D[t,s] = exp(cumf_t - cumf_s + i_s - m_t*)
+    # with per-step stabilizer m_t* = max(m0 + cumf_t, max_{s<=t}(i_s + cumf_t - cumf_s))
+    dec_ts = cum_f[:, :, None, :] - cum_f[:, None, :, :] + ig[:, None, :, :]
+    causal = jnp.tril(jnp.ones((ch, ch), bool))
+    dec_ts = jnp.where(causal[None, :, :, None], dec_ts, -jnp.inf)
+    m_step = jnp.maximum(m0[:, None] + cum_f, dec_ts.max(axis=2))  # (B,ch,H)
+    d_mat = jnp.exp(dec_ts - m_step[:, :, None, :])     # (B,ch,ch,H)
+    carry_dec = jnp.exp(m0[:, None] + cum_f - m_step)   # (B,ch,H)
+
+    qf = q.astype(jnp.float32) * (d ** -0.5)
+    s_intra = jnp.einsum("bthd,bshd->btsh", qf, k.astype(jnp.float32)) * d_mat
+    num = jnp.einsum("btsh,bshd->bthd", s_intra, v.astype(jnp.float32)) \
+        + jnp.einsum("bthd,bhde,bth->bthe", qf, C0, carry_dec)
+    den = jnp.abs(jnp.einsum("btsh,bsh->bth", s_intra, jnp.ones((b, ch, h))) * 0
+                  + s_intra.sum(axis=2)
+                  + jnp.einsum("bthd,bhd,bth->bth", qf, n0, carry_dec))
+    hy = num / jnp.maximum(den, jnp.exp(-m_step))[..., None]
+
+    # carry update to chunk end
+    k_dec = jnp.exp(a_val - m_new[:, None])             # (B,ch,H)
+    C1 = C0 * jnp.exp(m_inter - m_new)[..., None, None] \
+        + jnp.einsum("bshd,bsh,bshe->bhde", k.astype(jnp.float32), k_dec,
+                     v.astype(jnp.float32))
+    n1 = n0 * jnp.exp(m_inter - m_new)[..., None] \
+        + jnp.einsum("bshd,bsh->bhd", k.astype(jnp.float32), k_dec)
+    return (C1, n1, m_new), hy
+
+
+def mlstm_apply(params: Params, x: jnp.ndarray, cfg: XLSTMConfig) -> jnp.ndarray:
+    b, t, _ = x.shape
+    h, d = cfg.n_heads, cfg.head_dim_m
+    up, gate = jnp.split(x @ params["w_up"], 2, axis=-1)
+    q = (up @ params["w_q"]).reshape(b, t, h, d)
+    k = (up @ params["w_k"]).reshape(b, t, h, d)
+    v = (up @ params["w_v"]).reshape(b, t, h, d)
+    ig = (up.astype(jnp.float32) @ params["w_i"]) + params["b_i"]
+    fg = (up.astype(jnp.float32) @ params["w_f"]) + params["b_f"]
+
+    ch = min(cfg.chunk, t)
+    assert t % ch == 0, (t, ch)
+    nc = t // ch
+    def to_chunks(a):
+        return a.reshape(b, nc, ch, *a.shape[2:]).transpose(1, 0, 2, *range(3, a.ndim + 1))
+    xs = tuple(map(to_chunks, (q, k, v, ig, fg)))
+    carry = (jnp.zeros((b, h, d, d), jnp.float32),
+             jnp.zeros((b, h, d), jnp.float32),
+             jnp.full((b, h), -1e30, jnp.float32))
+    body = jax.checkpoint(lambda c, z: _mlstm_chunk(c, z, d), prevent_cse=False)
+    _, hy = jax.lax.scan(body, carry, xs, unroll=cfg.unroll)
+    hy = hy.transpose(1, 0, 2, 3, 4).reshape(b, t, h * d)
+    # per-head RMS readout norm + output gate
+    hy = hy / jnp.maximum(jnp.sqrt(jnp.mean(hy ** 2, -1, keepdims=True)), 1e-6)
+    out = (hy * jax.nn.silu(gate.astype(jnp.float32))).astype(x.dtype)
+    return out @ params["w_down"]
+
+
+def mlstm_init_cache(cfg: XLSTMConfig, batch: int) -> Params:
+    h, d = cfg.n_heads, cfg.head_dim_m
+    return {
+        "C": jnp.zeros((batch, h, d, d), jnp.float32),
+        "n": jnp.zeros((batch, h, d), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(params: Params, x: jnp.ndarray, cache: Params,
+                 cfg: XLSTMConfig) -> Tuple[jnp.ndarray, Params]:
+    b = x.shape[0]
+    h, d = cfg.n_heads, cfg.head_dim_m
+    up, gate = jnp.split(x @ params["w_up"], 2, axis=-1)   # (B,1,di)
+    q = (up @ params["w_q"]).reshape(b, h, d)
+    k = (up @ params["w_k"]).reshape(b, h, d)
+    v = (up @ params["w_v"]).reshape(b, h, d)
+    ig = ((up.astype(jnp.float32) @ params["w_i"]) + params["b_i"])[:, 0]
+    fg = ((up.astype(jnp.float32) @ params["w_f"]) + params["b_f"])[:, 0]
+    logf = jax.nn.log_sigmoid(fg)
+    m_new = jnp.maximum(logf + cache["m"], ig)
+    fd = jnp.exp(logf + cache["m"] - m_new)
+    idec = jnp.exp(ig - m_new)
+    C1 = cache["C"] * fd[..., None, None] + \
+        jnp.einsum("bhd,bhe,bh->bhde", k.astype(jnp.float32),
+                   v.astype(jnp.float32), idec)
+    n1 = cache["n"] * fd[..., None] + k.astype(jnp.float32) * idec[..., None]
+    qf = q.astype(jnp.float32) * (d ** -0.5)
+    num = jnp.einsum("bhd,bhde->bhe", qf, C1)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n1))
+    hy = (num / jnp.maximum(den, jnp.exp(-m_new))[..., None]).reshape(b, 1, h * d)
+    hy = hy / jnp.maximum(jnp.sqrt(jnp.mean(hy ** 2, -1, keepdims=True)), 1e-6)
+    out = (hy * jax.nn.silu(gate.astype(jnp.float32))).astype(x.dtype)
+    return out @ params["w_down"], {"C": C1, "n": n1, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg: XLSTMConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    h, hd = cfg.n_heads, cfg.head_dim_s
+    dff = int(d * cfg.proj_factor_s)
+    def rec(k):
+        return (jax.random.normal(k, (h, hd, hd), jnp.float32) * hd ** -0.5)
+    return {
+        "w_ifzo": dense_init(ks[0], d, 4 * d, dtype),
+        "r_i": rec(ks[1]), "r_f": rec(ks[2]), "r_z": rec(ks[3]), "r_o": rec(ks[4]),
+        "b_ifzo": jnp.zeros((4 * d,), jnp.float32),
+        "w_ff1": dense_init(ks[5], d, dff, dtype),
+        "w_ff2": dense_init(ks[6], dff, d, dtype),
+    }
+
+
+def _slstm_step(params, cfg: XLSTMConfig, carry, xt):
+    """xt: (B, 4d) pre-computed input projections."""
+    c0, n0, m0, h0 = carry                      # (B,H,hd) each, m0/n0 (B,H,hd)
+    b = xt.shape[0]
+    h, hd = cfg.n_heads, cfg.head_dim_s
+    hr = h0.reshape(b, h, hd)
+    rec = lambda r: jnp.einsum("bhd,hde->bhe", hr, r)
+    xi, xf, xz, xo = jnp.split(xt.astype(jnp.float32) + params["b_ifzo"], 4, -1)
+    sh = lambda a: a.reshape(b, h, hd)
+    it = sh(xi) + rec(params["r_i"])
+    ft = sh(xf) + rec(params["r_f"])
+    zt = jnp.tanh(sh(xz) + rec(params["r_z"]))
+    ot = jax.nn.sigmoid(sh(xo) + rec(params["r_o"]))
+    logf = jax.nn.log_sigmoid(ft)
+    m1 = jnp.maximum(logf + m0, it)
+    c1 = c0 * jnp.exp(logf + m0 - m1) + jnp.exp(it - m1) * zt
+    n1 = n0 * jnp.exp(logf + m0 - m1) + jnp.exp(it - m1)
+    h1 = ot * c1 / jnp.maximum(n1, 1e-6)
+    return (c1, n1, m1, h1.reshape(b, h * hd)), h1.reshape(b, h * hd)
+
+
+def slstm_apply(params: Params, x: jnp.ndarray, cfg: XLSTMConfig) -> jnp.ndarray:
+    b, t, d = x.shape
+    xt = (x @ params["w_ifzo"]).transpose(1, 0, 2)          # (T,B,4d)
+    carry = slstm_init_cache(cfg, b)
+    carry = (carry["c"], carry["n"], carry["m"], carry["h"])
+    step = lambda c, z: _slstm_step(params, cfg, c, z)
+    _, hy = jax.lax.scan(step, carry, xt)
+    hy = hy.transpose(1, 0, 2).astype(x.dtype)              # (B,T,d)
+    # post-FFN (proj factor 4/3, GELU)
+    y = jax.nn.gelu((hy @ params["w_ff1"]).astype(jnp.float32))
+    return (y.astype(x.dtype) @ params["w_ff2"])
+
+
+def slstm_init_cache(cfg: XLSTMConfig, batch: int) -> Params:
+    h, hd = cfg.n_heads, cfg.head_dim_s
+    return {
+        "c": jnp.zeros((batch, h, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "m": jnp.full((batch, h, hd), -1e30, jnp.float32),
+        "h": jnp.zeros((batch, h * hd), jnp.float32),
+    }
+
+
+def slstm_decode(params: Params, x: jnp.ndarray, cache: Params,
+                 cfg: XLSTMConfig) -> Tuple[jnp.ndarray, Params]:
+    b = x.shape[0]
+    xt = (x @ params["w_ifzo"])[:, 0]                        # (B,4d)
+    carry = (cache["c"], cache["n"], cache["m"], cache["h"])
+    (c1, n1, m1, h1), hy = _slstm_step(params, cfg, carry, xt)
+    hy = hy[:, None].astype(x.dtype)
+    y = jax.nn.gelu((hy @ params["w_ff1"]).astype(jnp.float32))
+    out = y.astype(x.dtype) @ params["w_ff2"]
+    return out, {"c": c1, "n": n1, "m": m1, "h": h1}

@@ -1,0 +1,3 @@
+from .optimizer import (OptConfig, adamw_init, adamw_update,  # noqa: F401
+                        cosine_lr, global_norm)
+from . import compression  # noqa: F401

@@ -1,0 +1,1 @@
+from .engine import ServeEngine, GenRequest  # noqa: F401

@@ -1,0 +1,108 @@
+"""Batched decode engine: continuous-batching-style serving loop.
+
+Requests are admitted into fixed batch slots; each engine step decodes one
+token for every active slot (single jitted decode_step over the whole
+batch).  Finished slots (EOS or max_tokens) are immediately refilled from
+the queue — the standard continuous-batching discipline, with per-slot
+position indices kept in a vectorized cache.
+
+Simplification vs a production server: all slots share one cache-length
+high-water mark (`index` is the max position across slots; per-slot
+validity is enforced by masking on position), and prompts are prefilled
+token-by-token through the decode path.  Bulk prefill is lowered
+separately for the roofline cells (launch/steps.make_prefill_step).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import decode_step, init_caches
+
+
+@dataclasses.dataclass
+class GenRequest:
+    request_id: int
+    prompt: List[int]
+    max_tokens: int = 16
+    eos_token: Optional[int] = None
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Optional[GenRequest] = None
+    prompt_cursor: int = 0
+    generated: List[int] = dataclasses.field(default_factory=list)
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
+                 max_len: int = 256, dtype=jnp.float32):
+        self.cfg = cfg
+        self.params = params
+        self.slots = [_Slot() for _ in range(batch_slots)]
+        self.max_len = max_len
+        self.caches = init_caches(cfg, batch_slots, max_len, dtype)
+        self.queue: List[GenRequest] = []
+        self.done: Dict[int, List[int]] = {}
+        self.index = 0
+        self._step = jax.jit(
+            lambda p, tok, c, i: decode_step(p, tok, c, i, cfg))
+        self._tokens = np.zeros((batch_slots,), np.int32)
+
+    def submit(self, req: GenRequest) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for slot in self.slots:
+            if slot.req is None and self.queue:
+                slot.req = self.queue.pop(0)
+                slot.prompt_cursor = 0
+                slot.generated = []
+
+    @property
+    def active(self) -> bool:
+        return bool(self.queue) or any(s.req is not None for s in self.slots)
+
+    def step(self) -> None:
+        """One engine tick: feed each slot its next token, decode, collect."""
+        self._admit()
+        feed = np.zeros((len(self.slots),), np.int32)
+        for i, slot in enumerate(self.slots):
+            if slot.req is None:
+                continue
+            if slot.prompt_cursor < len(slot.req.prompt):
+                feed[i] = slot.req.prompt[slot.prompt_cursor]
+            else:
+                feed[i] = slot.generated[-1] if slot.generated else 0
+        logits, self.caches = self._step(
+            self.params, jnp.asarray(feed), self.caches,
+            jnp.asarray(self.index, jnp.int32))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self.index += 1
+        for i, slot in enumerate(self.slots):
+            if slot.req is None:
+                continue
+            if slot.prompt_cursor < len(slot.req.prompt) - 1:
+                slot.prompt_cursor += 1
+                continue
+            slot.prompt_cursor += 1
+            slot.generated.append(int(nxt[i]))
+            req = slot.req
+            if len(slot.generated) >= req.max_tokens or \
+                    (req.eos_token is not None and
+                     slot.generated[-1] == req.eos_token):
+                self.done[req.request_id] = list(slot.generated)
+                slot.req = None
+
+    def run(self, max_ticks: int = 10_000) -> Dict[int, List[int]]:
+        ticks = 0
+        while self.active and ticks < max_ticks and self.index < self.max_len:
+            self.step()
+            ticks += 1
+        return self.done

@@ -1,0 +1,2 @@
+"""Distribution layer: mesh-agnostic sharding rules (DP/TP/EP/SP/FSDP)."""
+from .context import constraint, sharding_rules, current_rules  # noqa: F401

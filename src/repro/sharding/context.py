@@ -1,0 +1,40 @@
+"""Activation-sharding context.
+
+Model code annotates tensors by *logical* name (``constraint(x, "act_btd")``)
+and stays mesh-agnostic; the launcher installs a rules table mapping logical
+names → PartitionSpec for the active mesh.  When no rules are installed
+(unit tests, single-device smoke runs) the calls are no-ops, so the model
+zoo runs identically on 1 device and on the 512-chip production mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import PartitionSpec
+
+_state = threading.local()
+
+
+def current_rules() -> Optional[Dict[str, PartitionSpec]]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def sharding_rules(rules: Optional[Dict[str, PartitionSpec]]):
+    prev = current_rules()
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def constraint(x, name: str):
+    """Apply a named sharding constraint if rules are installed, else no-op."""
+    rules = current_rules()
+    if rules is None or name not in rules:
+        return x
+    return jax.lax.with_sharding_constraint(x, rules[name])

@@ -1,0 +1,251 @@
+"""Parameter / activation / cache partitioning rules (DP, TP, EP, SP, FSDP).
+
+Mesh axes: ("data", "model") single-pod, ("pod", "data", "model") multi-pod.
+``pod``+``data`` together form the data-parallel (and FSDP/ZeRO) domain;
+``model`` carries tensor/expert parallelism.
+
+All rules are *divisibility-guarded*: a dimension is only sharded if the
+axis size divides it, otherwise the rule degrades (next candidate dim, or
+replication) — so the same rule table serves every arch (14-head internvl,
+8-expert grok, 262k-vocab gemma) without per-arch spec tables.  The
+`fsdp` flag additionally spreads the largest replicated dim of every large
+param over the data domain (params+optimizer ⇒ ZeRO-ish), which is what
+lets the 314B/398B configs fit 16 GB/chip.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def normalize_path(keystr_path: str) -> str:
+    """jax keystr "['layers']['b0']['attn']['wq']" → "layers/b0/attn/wq"."""
+    return keystr_path.replace("']['", "/").replace("['", "").replace("']", "") \
+        .replace("[", "/").replace("]", "")
+
+
+def dp_axis_names(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axis_size(mesh: Mesh, names) -> int:
+    if isinstance(names, str):
+        names = (names,)
+    s = 1
+    for n in names:
+        s *= mesh.shape[n]
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules
+# ---------------------------------------------------------------------------
+
+# (path regex, per-dim logical role) — roles: "model" (TP/EP candidate),
+# "fsdp" (FSDP candidate), None.  First match wins; dims listed from 0.
+_PARAM_RULES = [
+    # embed is vocab-sharded.  A d-sharded table would make the lookup
+    # gather local, but XLA's partitioner crashes on that pattern
+    # ("Slice dim size … greater than dynamic slice dimension", tested on
+    # jax 0.8.2) — so we keep V:model and pay the partitioner's u32
+    # select-mask tensors on the big-vocab cells (quantified in
+    # EXPERIMENTS.md §Perf as a known-cost refuted iteration).
+    (r"embed$",                ("model", "fsdp")),       # (V, d) vocab-TP
+    (r"lm_head$",              ("fsdp", "model")),       # (d, V)
+    (r"frontend_proj$",        (None, "model")),
+    (r"(norm|scale|bias|b_i$|b_f$|dt_bias|d_skip|conv_b)", None),
+    # attention
+    (r"attn.*w[qkv]$",         ("fsdp", "model")),       # (d, H·Dh)
+    (r"attn.*wo$",             ("model", "fsdp")),       # (H·Dh, d)
+    (r"attn.*wdkv$",           ("fsdp", None)),          # (d, r) small
+    (r"attn.*wkr$",            (None, None)),
+    (r"attn.*wu[kv]$",         (None, "model")),         # (r, H·dim)
+    (r"cross.*w[qkv]$",        ("fsdp", "model")),
+    (r"cross.*wo$",            ("model", "fsdp")),
+    # dense FFN
+    (r"ffn.*w_(gate|up)$",     ("fsdp", "model")),       # (d, ff)
+    (r"ffn.*w_down$",          ("model", "fsdp")),       # (ff, d)
+    (r"shared.*w_(gate|up)$",  ("fsdp", "model")),
+    (r"shared.*w_down$",       ("model", "fsdp")),
+    # MoE experts (E, d, f) / (E, f, d): EP on E, fallback TP on f
+    (r"moe.*router$",          (None, None)),
+    (r"moe.*w_(gate|up)$",     ("model", "fsdp", "model_alt")),
+    (r"moe.*w_down$",          ("model", "model_alt", "fsdp")),
+    # Mamba
+    (r"ssm.*w_in$",            ("fsdp", "model")),       # (d, 2di)
+    (r"ssm.*conv_w$",          (None, "model")),
+    (r"ssm.*w_x$",             ("model", None)),         # (di, r+2ds)
+    (r"ssm.*w_dt$",            (None, "model")),         # (r, di)
+    (r"ssm.*a_log$",           ("model", None)),
+    (r"ssm.*w_out$",           ("model", "fsdp")),       # (di, d)
+    # xLSTM
+    (r"mlstm.*w_up$",          ("fsdp", "model")),
+    (r"mlstm.*w_[qkv]$",       (None, "model")),
+    (r"mlstm.*w_[if]$",        (None, None)),
+    (r"mlstm.*w_down$",        ("model", "fsdp")),
+    (r"slstm.*w_ifzo$",        ("fsdp", "model")),
+    (r"slstm.*r_[ifzo]$",      None),                    # small recurrent mats
+    (r"slstm.*w_ff1$",         ("fsdp", "model")),
+    (r"slstm.*w_ff2$",         ("model", "fsdp")),
+    # CNN / generic heads
+    (r"head",                  (None, None)),
+    (r"\bw$",                  None),
+]
+
+_FSDP_MIN_SIZE = 1 << 22      # only FSDP-shard params ≥ 4M elements
+
+
+def _divisible(dim: int, size: int) -> bool:
+    return size > 1 and dim % size == 0
+
+
+def param_spec(path: str, shape: Tuple[int, ...], mesh: Mesh,
+               *, fsdp: bool = False, scan_outer: bool = False) -> P:
+    """PartitionSpec for one param.  ``scan_outer``: leading period axis
+    (stacked layers) — never sharded, prepended as None."""
+    dims = list(shape[1:]) if scan_outer else list(shape)
+    rule = None
+    for pat, r in _PARAM_RULES:
+        if re.search(pat, path):
+            rule = r
+            break
+    model_n = axis_size(mesh, "model")
+    dp = dp_axis_names(mesh)
+    dp_n = axis_size(mesh, dp)
+    spec: list = [None] * len(dims)
+    if rule is not None:
+        model_used = False
+        for i, role in enumerate(rule[:len(dims)]):
+            if role == "model" and not model_used and _divisible(dims[i], model_n):
+                spec[i] = "model"
+                model_used = True
+        if not model_used:          # fallback: model_alt slots
+            for i, role in enumerate(rule[:len(dims)]):
+                if role == "model_alt" and _divisible(dims[i], model_n):
+                    spec[i] = "model"
+                    model_used = True
+                    break
+        if fsdp and int(np.prod(shape)) >= _FSDP_MIN_SIZE:
+            for i, role in enumerate(rule[:len(dims)]):
+                if role == "fsdp" and spec[i] is None and _divisible(dims[i], dp_n):
+                    spec[i] = dp
+                    break
+    if scan_outer:
+        spec = [None] + spec
+    return P(*spec)
+
+
+def _is_scanned(path: str) -> bool:
+    return "layers/" in path
+
+
+def params_pspecs(params_shapes: Any, mesh: Mesh, *, fsdp: bool = False) -> Any:
+    """Pytree of PartitionSpec matching a params(-shaped) pytree."""
+    flat = jax.tree_util.tree_flatten_with_path(params_shapes)[0]
+    tdef = jax.tree_util.tree_structure(params_shapes)
+    out = []
+    for kp, leaf in flat:
+        path = normalize_path(jax.tree_util.keystr(kp))
+        out.append(param_spec(path, tuple(leaf.shape), mesh, fsdp=fsdp,
+                              scan_outer=_is_scanned(path)))
+    return jax.tree_util.tree_unflatten(tdef, out)
+
+
+def params_shardings(params_shapes: Any, mesh: Mesh, *, fsdp: bool = False) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        params_pspecs(params_shapes, mesh, fsdp=fsdp))
+
+
+def opt_state_pspecs(opt_shapes: Any, params_shapes: Any, mesh: Mesh,
+                     *, fsdp: bool = False) -> Any:
+    """mu/nu/master mirror the param specs; scalars replicated."""
+    pspecs = params_pspecs(params_shapes, mesh, fsdp=fsdp)
+    return {
+        "step": P(),
+        "mu": pspecs, "nu": pspecs, "master": pspecs,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache / activation rules
+# ---------------------------------------------------------------------------
+
+def batch_pspecs(batch_shapes: Any, mesh: Mesh) -> Any:
+    dp = dp_axis_names(mesh)
+    dp_n = axis_size(mesh, dp)
+
+    def one(leaf):
+        shape = tuple(leaf.shape)
+        if len(shape) >= 1 and _divisible(shape[0], dp_n):
+            return P(dp, *([None] * (len(shape) - 1)))
+        return P(*([None] * len(shape)))
+
+    return jax.tree.map(one, batch_shapes)
+
+
+def cache_pspecs(cache_shapes: Any, mesh: Mesh, *, scanned: bool = True) -> Any:
+    """Generic chooser for decode caches of any rank.
+
+    Greedy: batch dim → dp domain if divisible, else the longest dim → dp
+    (sequence parallelism for batch=1 long-context); then `model` on the
+    first remaining divisible dim (kv-heads, latent rank, d_inner, …).
+    Leading period axis (scanned stacks) is never sharded.
+    """
+    dp = dp_axis_names(mesh)
+    dp_n = axis_size(mesh, dp)
+    model_n = axis_size(mesh, "model")
+
+    def one_path(kp, leaf):
+        shape = list(leaf.shape)
+        skip = 1 if (scanned and "layers/" in normalize_path(jax.tree_util.keystr(kp))) else 0
+        spec: list = [None] * len(shape)
+        body = list(range(skip, len(shape)))
+        # dp placement: batch dim (first body dim) else longest dim
+        dp_dim = None
+        if body and _divisible(shape[body[0]], dp_n):
+            dp_dim = body[0]
+        else:
+            cands = [d for d in body[1:] if _divisible(shape[d], dp_n)]
+            if cands:
+                dp_dim = max(cands, key=lambda d: shape[d])
+        if dp_dim is not None:
+            spec[dp_dim] = dp
+        # model placement: first remaining divisible dim, preferring later
+        # (feature-like) dims over sequence dims.
+        for d in reversed(body):
+            if d != dp_dim and _divisible(shape[d], model_n) and shape[d] >= model_n:
+                spec[d] = "model"
+                break
+        return P(*spec)
+
+    flat = jax.tree_util.tree_flatten_with_path(cache_shapes)[0]
+    tdef = jax.tree_util.tree_structure(cache_shapes)
+    return jax.tree_util.tree_unflatten(
+        tdef, [one_path(kp, leaf) for kp, leaf in flat])
+
+
+def activation_rules(mesh: Mesh) -> Dict[str, P]:
+    dp = dp_axis_names(mesh)
+    # NOTE "moe_ecd" (EP pinning of dispatch buffers) was measured to
+    # REGRESS memory on every MoE cell (dp-sharded tokens → model-sharded
+    # buffer forces a resharding of the scatter; grok 68→107 GiB,
+    # deepseek 20→27 GiB) and is deliberately absent — see EXPERIMENTS.md
+    # §Perf iteration log.
+    return {
+        "act_btd": P(dp, None, None),
+        # head weight (d, V): V on model for the chunked-xent matmul (the
+        # reshard from the d-sharded stored embed is hoisted out of the
+        # chunk scan — loop-invariant — so it costs one a2a per microbatch
+        # direction, not per chunk).
+        "head_dv": P(None, "model"),
+    }
+
+
+def to_shardings(pspec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), pspec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# src/ layout import path (tests run with PYTHONPATH=src, but be robust)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: deliberately NO --xla_force_host_platform_device_count here — smoke
+# tests and benches must see the real single device (the 512-device override
+# belongs exclusively to launch/dryrun.py, see its module docstring).

@@ -1,0 +1,106 @@
+"""CNN zoo (the paper's five benchmarks) + serving engine tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.policy import DC, IN_OUT
+from repro.core.sparsity import element_sparsity
+from repro.data.pipeline import image_batch
+from repro.models.cnn import NETWORKS, build_cnn
+
+
+@pytest.mark.parametrize("name", list(NETWORKS))
+def test_cnn_forward_backward(name):
+    model = build_cnn(name, image_size=16, width=0.25, num_classes=10)
+    params = model.init(jax.random.key(0))
+    img, labels = image_batch(0, 0, batch=2, image_size=16, num_classes=10)
+    loss, grads = jax.value_and_grad(model.loss)(params, img, labels)
+    assert np.isfinite(float(loss))
+    for leaf in jax.tree.leaves(grads):
+        assert np.all(np.isfinite(np.asarray(leaf)))
+
+
+@pytest.mark.parametrize("name", list(NETWORKS))
+def test_cnn_activations_are_sparse(name):
+    """§3.1: zero-mean inputs + ReLU ⇒ ~30–70% activation sparsity from
+    the first training step — the paper's enabling observation."""
+    model = build_cnn(name, image_size=16, width=0.25, num_classes=10)
+    params = model.init(jax.random.key(0))
+    img, _ = image_batch(0, 0, batch=2, image_size=16, num_classes=10)
+    cap = {}
+    model.apply(params, img, capture=cap)
+    assert cap, name
+    sp = [float(element_sparsity(v)) for v in cap.values()]
+    assert max(sp) > 0.2, (name, sp)
+
+
+def test_cnn_sparse_training_is_lossless():
+    """Training under IN_OUT == training under DC, step for step — the
+    system-level statement of the paper's exactness claim."""
+    model = build_cnn("vgg16", image_size=8, width=0.125, num_classes=10)
+    img, labels = image_batch(0, 0, batch=2, image_size=8, num_classes=10)
+
+    def run(policy):
+        params = model.init(jax.random.key(0))
+        losses = []
+        for step in range(3):
+            loss, grads = jax.value_and_grad(
+                lambda p: model.loss(p, img, labels, policy))(params)
+            params = jax.tree.map(lambda p, g: p - 0.05 * g, params, grads)
+            losses.append(float(loss))
+        return losses
+
+    dc = run(DC)
+    sp = run(IN_OUT.with_(kernel_impl="pallas", block=(16, 16, 16)))
+    np.testing.assert_allclose(dc, sp, rtol=2e-4, atol=2e-5)
+    assert dc[-1] < dc[0]                  # actually learning
+
+
+def test_conv_specs_geometry():
+    model = build_cnn("vgg16", image_size=224, width=1.0, num_classes=1000)
+    specs = model.conv_specs(batch=16)
+    assert len(specs) == 13                # VGG16 conv layers
+    assert specs[0].c == 3 and specs[0].m == 64
+    # pool boundaries disable output sparsity for the next conv
+    relu_flags = [s.input_is_relu for s in specs]
+    assert relu_flags[0] is False          # raw image input
+    assert relu_flags[2] is False          # post-pool
+    assert relu_flags[1] is True
+
+
+def test_serving_engine_continuous_batching():
+    from repro.configs import SMOKE_ARCHS
+    from repro.models.transformer import lm_init
+    from repro.serving.engine import GenRequest, ServeEngine
+    cfg = SMOKE_ARCHS["smollm-360m"]
+    params = lm_init(jax.random.key(0), cfg, dtype=jnp.float32)
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=64)
+    for rid in range(5):                   # more requests than slots
+        eng.submit(GenRequest(rid, [1 + rid, 2, 3], max_tokens=4))
+    done = eng.run()
+    assert sorted(done) == [0, 1, 2, 3, 4]
+    assert all(len(v) == 4 for v in done.values())
+
+
+def test_serving_greedy_matches_manual_decode():
+    from repro.configs import SMOKE_ARCHS
+    from repro.models.transformer import decode_step, init_caches, lm_init
+    from repro.serving.engine import GenRequest, ServeEngine
+    cfg = SMOKE_ARCHS["stablelm-1.6b"]
+    params = lm_init(jax.random.key(0), cfg, dtype=jnp.float32)
+    prompt = [5, 9, 2]
+    eng = ServeEngine(cfg, params, batch_slots=1, max_len=32)
+    eng.submit(GenRequest(0, prompt, max_tokens=3))
+    got = eng.run()[0]
+    # manual single-stream decode
+    caches = init_caches(cfg, 1, 32, jnp.float32)
+    toks = list(prompt)
+    out = []
+    for i in range(len(prompt) + 2):
+        feed = toks[i] if i < len(prompt) else out[-1]
+        logits, caches = decode_step(params, jnp.asarray([feed], jnp.int32),
+                                     caches, jnp.asarray(i, jnp.int32), cfg)
+        if i >= len(prompt) - 1:
+            out.append(int(jnp.argmax(logits[0])))
+    assert got == out[:3]

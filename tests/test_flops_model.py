@@ -1,0 +1,90 @@
+"""Calibration of the analytic executed-cost model against XLA's own HLO
+cost analysis on configs where HLO counting is sound (fully unrolled,
+single device, microbatches=1).
+
+XLA's cost analysis counts while-bodies once; with every scan unrolled the
+compiled FLOPs are complete, and the analytic model must agree.  This is
+the evidence that lets the full (necessarily scanned) cells trust the
+analytic roofline terms in EXPERIMENTS.md.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.flops import analytic_cost
+from repro.launch.steps import make_prefill_step, make_train_step
+from repro.models.transformer import lm_init
+from repro.optim.optimizer import OptConfig
+
+
+def _hlo_flops(fn, *args):
+    compiled = jax.jit(fn).lower(*args).compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return float(ca.get("flops", 0.0))
+
+
+def _small_dense(**kw):
+    base = dict(
+        name="cal", family="dense", n_layers=4, d_model=128, n_heads=4,
+        n_kv_heads=2, d_ff=256, vocab_size=512, ffn_activation="silu_glu",
+        tie_embeddings=True, remat=False, scan_unroll=64,
+        q_chunk=32, kv_chunk=32, dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.mark.parametrize("schedule", ["rect", "tri"])
+def test_train_flops_calibration_dense(schedule):
+    cfg = _small_dense(attn_schedule=schedule)
+    shape = ShapeConfig("cal", seq_len=128, global_batch=4, kind="train")
+    params = jax.eval_shape(lambda: lm_init(jax.random.key(0), cfg))
+    from repro.optim.optimizer import adamw_init
+    opt = jax.eval_shape(adamw_init, params)
+    batch = {"tokens": jax.ShapeDtypeStruct((4, 129), jnp.int32)}
+    step = make_train_step(cfg, OptConfig(), microbatches=1)
+    hlo = _hlo_flops(step, params, opt, batch)
+    ana = analytic_cost(cfg, shape, dp_n=1, model_n=1).flops_per_device
+    ratio = ana / hlo
+    assert 0.6 < ratio < 1.6, (ana, hlo, ratio)
+
+
+def test_prefill_flops_calibration_dense():
+    cfg = _small_dense()
+    shape = ShapeConfig("cal", seq_len=256, global_batch=2, kind="prefill")
+    params = jax.eval_shape(lambda: lm_init(jax.random.key(0), cfg))
+    batch = {"tokens": jax.ShapeDtypeStruct((2, 257), jnp.int32)}
+    hlo = _hlo_flops(make_prefill_step(cfg), params, batch)
+    ana = analytic_cost(cfg, shape, dp_n=1, model_n=1).flops_per_device
+    assert 0.6 < ana / hlo < 1.6, (ana, hlo)
+
+
+def test_train_flops_calibration_moe():
+    from repro.models.moe import MoEConfig
+    cfg = _small_dense(
+        family="moe",
+        moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=256,
+                      activation="silu_glu"))
+    shape = ShapeConfig("cal", seq_len=128, global_batch=4, kind="train")
+    params = jax.eval_shape(lambda: lm_init(jax.random.key(0), cfg))
+    from repro.optim.optimizer import adamw_init
+    opt = jax.eval_shape(adamw_init, params)
+    batch = {"tokens": jax.ShapeDtypeStruct((4, 129), jnp.int32)}
+    step = make_train_step(cfg, OptConfig(), microbatches=1)
+    hlo = _hlo_flops(step, params, opt, batch)
+    ana = analytic_cost(cfg, shape, dp_n=1, model_n=1).flops_per_device
+    assert 0.55 < ana / hlo < 1.8, (ana, hlo)
+
+
+def test_remat_factor_visible():
+    """remat=True must cost exactly one extra forward in the model."""
+    shape = ShapeConfig("cal", seq_len=128, global_batch=4, kind="train")
+    a_no = analytic_cost(_small_dense(remat=False), shape, dp_n=1, model_n=1)
+    a_yes = analytic_cost(_small_dense(remat=True), shape, dp_n=1, model_n=1)
+    r = a_yes.detail["matmul_flops"] / a_no.detail["matmul_flops"]
+    assert abs(r - 4.0 / 3.0) < 1e-6

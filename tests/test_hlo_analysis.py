@@ -1,0 +1,60 @@
+"""HLO collective parser + roofline arithmetic tests."""
+import numpy as np
+
+from repro.launch import hlo_analysis as ha
+
+SAMPLE_HLO = """
+  %ag.1 = bf16[256,1024]{1,0} all-gather(%p0), replica_groups={...}
+  %ar.2 = f32[512]{0} all-reduce(%x), to_apply=%add
+  %rs.3 = (f32[128,64]{1,0}, f32[128,64]{1,0}) reduce-scatter(%a, %b)
+  %cp.4 = bf16[32,32]{1,0} collective-permute(%y)
+  %a2a.5 = f32[16,16]{1,0} all-to-all(%z)
+  %dot.6 = f32[1024,1024]{1,0} dot(%l, %r)
+"""
+
+
+def test_collective_bytes_parser():
+    out = ha.collective_bytes(SAMPLE_HLO)
+    assert out["all-gather"] == 256 * 1024 * 2
+    assert out["all-reduce"] == 512 * 4
+    assert out["reduce-scatter"] == 2 * 128 * 64 * 4
+    assert out["collective-permute"] == 32 * 32 * 2
+    assert out["all-to-all"] == 16 * 16 * 4
+    assert out["count"] == 5
+    assert out["total"] == sum(out[k] for k in (
+        "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+        "collective-permute"))
+
+
+def test_roofline_terms_and_fractions():
+    rl = ha.roofline_terms(hlo_flops=197e12, hlo_bytes=819e9,
+                           coll_bytes=25e9, model_flops=197e12 * 256 * 0.5)
+    assert abs(rl.compute_s - 1.0) < 1e-9
+    assert abs(rl.memory_s - 1.0) < 1e-9
+    assert abs(rl.collective_s - 0.5) < 1e-9
+    assert rl.dominant in ("compute", "memory")
+    assert abs(rl.useful_flop_fraction(256) - 0.5) < 1e-9
+    assert abs(rl.roofline_fraction(256) - 0.5) < 1e-9
+
+
+def test_model_flops_conventions():
+    from repro.configs import ARCHS
+    from repro.configs.base import TRAIN_4K, DECODE_32K, PREFILL_32K
+    n = 1e9
+    cfg = ARCHS["smollm-360m"]
+    assert ha.model_flops(cfg, TRAIN_4K, n) == 6 * n * 4096 * 256
+    assert ha.model_flops(cfg, PREFILL_32K, n) == 2 * n * 32768 * 32
+    assert ha.model_flops(cfg, DECODE_32K, n) == 2 * n * 128
+
+
+def test_active_param_count_scales_moe():
+    import jax
+    from repro.configs import ARCHS
+    from repro.models.transformer import lm_init
+    cfg = ARCHS["grok-1-314b"]
+    shapes = jax.eval_shape(lambda: lm_init(jax.random.key(0), cfg))
+    total = sum(np.prod(l.shape) for l in jax.tree.leaves(shapes))
+    active = ha.active_param_count(shapes, cfg)
+    # grok: 8 experts top-2 → expert params scale 4×; experts dominate
+    assert active < 0.45 * total
+    assert active > 0.15 * total

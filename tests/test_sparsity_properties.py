@@ -1,0 +1,109 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sparsity
+from repro.kernels import ops, ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@st.composite
+def _matrix(draw, max_dim=48):
+    m = draw(st.integers(4, max_dim))
+    n = draw(st.integers(4, max_dim))
+    seed = draw(st.integers(0, 2 ** 16))
+    sp = draw(st.floats(0.0, 0.95))
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((m, n)).astype(np.float32)
+    x *= rng.random((m, n)) > sp
+    return jnp.asarray(x)
+
+
+@given(_matrix())
+def test_footprint_identity_through_relu(z):
+    """Paper §3.2: zeros of relu(z) contain zeros of any δ⊙σ'(z)."""
+    act = jnp.maximum(z, 0)
+    delta = jnp.asarray(
+        np.random.default_rng(0).standard_normal(z.shape), jnp.float32)
+    grad_pre = delta * (z > 0)
+    assert sparsity.footprints_identical(act, grad_pre)
+
+
+@given(_matrix(), st.sampled_from([4, 8, 16]))
+def test_capture_rate_bounds(x, b):
+    m, n = x.shape
+    xp = jnp.pad(x, ((0, -m % b), (0, -n % b)))
+    c = float(sparsity.capture_rate(xp, b, b))
+    assert 0.0 <= c <= 1.0
+    # block sparsity never exceeds element sparsity
+    assert float(sparsity.block_sparsity(xp, b, b)) <= \
+        float(sparsity.element_sparsity(xp)) + 1e-6
+
+
+@given(_matrix(max_dim=40), _matrix(max_dim=40), st.sampled_from([8, 16]))
+def test_masked_matmul_matches_oracle(a, bmat, blk):
+    k = min(a.shape[1], bmat.shape[0])
+    a = a[:, :k]
+    bmat = bmat[:k, :]
+    m, n = a.shape[0], bmat.shape[1]
+    rng = np.random.default_rng(1)
+    mask = jnp.asarray(rng.random((m, n)) > 0.5, jnp.float32)
+    mp = jnp.pad(mask, ((0, -m % blk), (0, -n % blk)))
+    om = ref.block_any_nonzero(mp, blk, blk)
+    got = ops.masked_matmul(a, bmat, out_mask=om, block=(blk, blk, blk))
+    want = np.asarray(a, np.float32) @ np.asarray(bmat, np.float32)
+    want = want * np.asarray(ref.expand_block_mask(om, blk, blk))[:m, :n]
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@given(st.integers(0, 2 ** 16), st.floats(0.1, 0.9))
+def test_relu_encode_bitmap_is_conservative(seed, sp):
+    """bitmap==0 ⇒ block truly all-zero (never skips live work)."""
+    rng = np.random.default_rng(seed)
+    z = rng.standard_normal((32, 32)).astype(np.float32)
+    z *= rng.random((32, 32)) > sp
+    y, bm = ops.relu_encode(jnp.asarray(z), block=(8, 8))
+    y = np.asarray(y)
+    bm = np.asarray(bm)
+    for i in range(4):
+        for j in range(4):
+            blockvals = y[i * 8:(i + 1) * 8, j * 8:(j + 1) * 8]
+            if bm[i, j] == 0:
+                assert np.all(blockvals == 0)
+            else:
+                assert np.any(blockvals > 0)
+
+
+@given(st.integers(0, 2 ** 16))
+def test_quantize_error_feedback_contracts(seed):
+    """int8 EF compression: accumulated error stays bounded (no drift)."""
+    from repro.optim.compression import dequantize, quantize
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal((64,)), jnp.float32)
+    err = jnp.zeros_like(g)
+    total_sent = jnp.zeros_like(g)
+    for _ in range(8):
+        q, scale, err = quantize(g, err)
+        total_sent = total_sent + dequantize(q, scale)
+    # after k steps, Σ sent ≈ k·g with error ≤ one quantization step
+    resid = np.abs(np.asarray(total_sent - 8 * g))
+    assert resid.max() <= float(jnp.max(jnp.abs(g))) / 127.0 + 1e-5
+
+
+@given(st.integers(2, 6), st.integers(0, 1000))
+def test_chunked_xent_matches_full(nchunk, seed):
+    from repro.models.transformer import chunked_xent
+    rng = np.random.default_rng(seed)
+    t, d, v = nchunk * 7, 16, 33
+    h = jnp.asarray(rng.standard_normal((t, d)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((d, v)), jnp.float32)
+    tgt = jnp.asarray(rng.integers(0, v, (t,)), jnp.int32)
+    got = chunked_xent(h, tgt, w, chunk=7)
+    logits = h @ w
+    want = (jax.nn.logsumexp(logits, -1)
+            - jnp.take_along_axis(logits, tgt[:, None], 1)[:, 0]).mean()
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
