@@ -13,11 +13,12 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 
 def main() -> None:
     from benchmarks.figures import ALL_FIGURES
-    from benchmarks.kernel_audit import kernel_audit
+    from benchmarks.kernel_audit import bitmap_op_audit, kernel_audit
     from benchmarks.roofline import roofline_rows
 
     benches = dict(ALL_FIGURES)
     benches["kernel_audit"] = kernel_audit
+    benches["bitmap_op_audit"] = bitmap_op_audit
     benches["roofline_table"] = roofline_rows
 
     os.makedirs(RESULTS_DIR, exist_ok=True)

@@ -27,6 +27,9 @@ class SparsityPolicy:
     block: Tuple[int, int, int] = (128, 128, 128)
     kernel_impl: Literal["pallas", "xla_ref"] = "xla_ref"
     interpret: Optional[bool] = None      # None → auto (CPU backend ⇒ True)
+    fuse_epilogue: bool = True            # BP: σ'-Hadamard inside the kernel
+                                          # (False = separate VPU pass, for
+                                          # ablating the fused writeback)
 
     @property
     def any_sparsity(self) -> bool:

@@ -11,19 +11,42 @@ with the same three skipping opportunities as core.sparse_linear:
       + input sparsity of the incoming gradient patches,
   WG  input sparsity on both operands.
 
+Sparsity metadata lifecycle: the forward pass runs the fused
+``kernels.relu_encode`` over the activation's (N·H·W, C) view ONCE, at
+per-pixel row granularity so the bitmap stays spatially addressable.  Every
+other mask is then *derived* from it without rescanning tensor-sized data:
+
+  * the backward out_mask is the same bitmap re-tiled to (bm, bn) — the
+    paper's FP/BP footprint identity;
+  * patch (im2col) operand masks — FP a_mask and the WG Xᵀ mask — come from
+    running ``_im2col`` on the BITMAP itself (a gather over an array C/gc×
+    smaller than the activation), then coarsening.  This is exact, because
+    an im2col'd any-nonzero cell equals the any-nonzero of the im2col'd
+    data (same gather, zero padding on both sides);
+  * the incoming gradient is scanned at most once per step; its dilated/
+    im2col'd mask (dX GEMM) and its (bk, bn) re-tiling (dW GEMM) are both
+    derived from that single fine bitmap.
+
 Exactness vs dense autodiff is asserted in tests for stride ∈ {1, 2} and
-padding ∈ {SAME, VALID}.
+padding ∈ {SAME, VALID}; threaded-vs-rescanned mask equality is property-
+tested in tests/test_bitmap_threading.py.
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as kops
 from .policy import SparsityPolicy
-from .sparse_linear import _bitmap_padded, _mm
+from .sparse_linear import (
+    _bitmap_padded, _mm, _needs_act_bitmap, _needs_grad_bitmap,
+)
+from .sparse_tensor import (
+    SparseTensor, coarsen_bitmap, conv_channel_granularity, scan_bitmap,
+)
 
 
 def _pad_amounts(h: int, r: int, stride: int, padding: str) -> Tuple[int, int]:
@@ -71,6 +94,41 @@ def _dilate_hw(x: jnp.ndarray, stride: int) -> jnp.ndarray:
     return out.at[:, ::stride, ::stride, :].set(x)
 
 
+# ---------------------------------------------------------------------------
+# Bitmap derivation (no tensor-sized scans past this line)
+# ---------------------------------------------------------------------------
+
+def _patch_bitmap(st: SparseTensor, spatial: Tuple[int, int, int, int],
+                  r: int, s: int, stride: int,
+                  pad: Tuple[int, int, int, int]) -> SparseTensor:
+    """im2col in bitmap space: (N·H·W, C/gc) fine bitmap -> fine bitmap of
+    the patch matrix (N·U·V, R·S·C/gc), exactly matching a fresh scan of
+    ``_im2col(data)``.  Pure gather on the bitmap — the activation is not
+    touched."""
+    n, h, w, c = spatial
+    gc = st.gran[1]
+    fb4 = st.bitmap.reshape(n, h, w, c // gc)
+    pb = _im2col(fb4, r, s, stride, pad)       # (N, U, V, R*S*C/gc)
+    u, v = pb.shape[1], pb.shape[2]
+    return SparseTensor(None, pb.reshape(n * u * v, -1), (1, gc))
+
+
+def _encode_conv_act(x_pre: jnp.ndarray, policy: SparsityPolicy,
+                     gc: int) -> Tuple[jnp.ndarray, SparseTensor]:
+    """(relu(x_pre), SparseTensor over the (N·H·W, C) view) — ONE fused
+    encode (pallas) or one counted scan (xla_ref) per activation per step."""
+    n, h, w, c = x_pre.shape
+    x2d = x_pre.reshape(n * h * w, c)
+    if policy.kernel_impl == "pallas":
+        y2d, fb = kops.relu_encode(x2d, block=(1, gc),
+                                   interpret=policy.interpret)
+        x = y2d.reshape(n, h, w, c)
+    else:
+        x = jnp.maximum(x_pre, jnp.zeros((), x_pre.dtype))
+        fb = scan_bitmap(x.reshape(n * h * w, c), (1, gc), kind="act")
+    return x, SparseTensor(x_pre, fb, (1, gc))
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
 def relu_conv(x_pre: jnp.ndarray, w: jnp.ndarray, stride: int, padding: str,
               policy: SparsityPolicy):
@@ -80,25 +138,46 @@ def relu_conv(x_pre: jnp.ndarray, w: jnp.ndarray, stride: int, padding: str,
 
 
 def _relu_conv_fwd(x_pre, w, stride, padding, policy: SparsityPolicy):
-    x = jnp.maximum(x_pre, jnp.zeros((), x_pre.dtype))
-    n, h, wd, c = x.shape
+    n, h, wd, c = x_pre.shape
     r, s, _, m = w.shape
+    bm, bk, bn = policy.block
     plh = _pad_amounts(h, r, stride, padding)
     plw = _pad_amounts(wd, s, stride, padding)
-    patches = _im2col(x, r, s, stride, (plh[0], plh[1], plw[0], plw[1]))
+    pad4 = (plh[0], plh[1], plw[0], plw[1])
+
+    if _needs_act_bitmap(policy):
+        gc = conv_channel_granularity(c, policy.block)
+        x, st = _encode_conv_act(x_pre, policy, gc)
+    else:
+        x = jnp.maximum(x_pre, jnp.zeros((), x_pre.dtype))
+        st = SparseTensor(x_pre, None, None)
+
+    patches = _im2col(x, r, s, stride, pad4)
     u, v = patches.shape[1], patches.shape[2]
     pm = patches.reshape(n * u * v, r * s * c)
     wm = w.reshape(r * s * c, m)
-    bm, bk, bn = policy.block
     a_mask = None
     if policy.use_input_sparsity_fp and policy.kernel_impl == "pallas":
-        a_mask = _bitmap_padded(pm.astype(jnp.float32), bm, bk)
+        a_mask = _patch_bitmap(st, (n, h, wd, c), r, s, stride, pad4) \
+            .mask_for((bm, bk))
     y = _mm(pm, wm, None, a_mask, None, policy, x_pre.dtype)
-    return y.reshape(n, u, v, m), (x_pre, w)
+    return y.reshape(n, u, v, m), (st, w)
+
+
+def _grad_sparse_tensor(dy32: jnp.ndarray, policy: SparsityPolicy,
+                        m: int) -> SparseTensor:
+    """Fine bitmap of the incoming gradient — the step's single dy scan."""
+    if not _needs_grad_bitmap(policy):
+        return SparseTensor(dy32, None, None)
+    n, u, v, _ = dy32.shape
+    gc = conv_channel_granularity(m, policy.block)
+    fb = scan_bitmap(dy32.reshape(n * u * v, m), (1, gc), kind="grad")
+    return SparseTensor(dy32, fb, (1, gc))
 
 
 def _relu_conv_bwd(stride, padding, policy: SparsityPolicy, res, dy):
-    x_pre, w = res
+    st, w = res
+    x_pre = st.data
     n, h, wd, c = x_pre.shape
     r, s, _, m = w.shape
     u, v = dy.shape[1], dy.shape[2]
@@ -106,6 +185,7 @@ def _relu_conv_bwd(stride, padding, policy: SparsityPolicy, res, dy):
     x = jnp.where(mask, x_pre, jnp.zeros((), x_pre.dtype))
     bm, bk, bn = policy.block
     dy32 = dy.astype(jnp.float32)
+    st_dy = _grad_sparse_tensor(dy32, policy, m)
 
     # ---- dx_pre: full-correlation of dilated dy with flipped w, fused with
     # the σ' Hadamard → OUTPUT sparsity on the (N·H·W, C) GEMM. ----
@@ -118,23 +198,40 @@ def _relu_conv_bwd(stride, padding, policy: SparsityPolicy, res, dy):
     pg_h_hi = h - (hd + pg_h_lo - r + 1) + 0  # solve for hi
     pg_w_lo = s - 1 - plw[0]
     pg_w_hi = wd - (wdd + pg_w_lo - s + 1)
-    gpatches = _im2col(dyd, r, s, 1, (pg_h_lo, pg_h_hi, pg_w_lo, pg_w_hi))
+    gpad4 = (pg_h_lo, pg_h_hi, pg_w_lo, pg_w_hi)
+    gpatches = _im2col(dyd, r, s, 1, gpad4)
     gm = gpatches.reshape(n * h * wd, r * s * m)
     # w flipped spatially, (r, s, m, c) ordering to match patch layout
     wt = jnp.flip(w, axis=(0, 1)).transpose(0, 1, 3, 2).reshape(r * s * m, c)
     mask2d = mask.reshape(n * h * wd, c).astype(jnp.float32)
-    out_mask = _bitmap_padded(mask2d, bm, bn) if policy.use_output_sparsity else None
-    g_mask = _bitmap_padded(gm, bm, bk) if policy.use_input_sparsity_bp else None
-    dx = _mm(gm, wt.astype(jnp.float32), out_mask, g_mask, None, policy, jnp.float32)
-    dx_pre = (dx * mask2d).reshape(n, h, wd, c).astype(x_pre.dtype)
+    # out_mask: the forward ReLU bitmap, re-tiled (footprint(σ') ==
+    # footprint(relu) — paper §3.2).  Zero recompute.
+    out_mask = st.mask_for((bm, bn)) if policy.use_output_sparsity else None
+    g_mask = None
+    if st_dy.bitmap is not None:
+        # The gradient-patch mask is the dy bitmap dilated and im2col'd in
+        # bitmap space — mirrors exactly what the data underwent.
+        gcg = st_dy.gran[1]
+        gfb4 = st_dy.bitmap.reshape(n, u, v, m // gcg)
+        gpb = _im2col(_dilate_hw(gfb4, stride), r, s, 1, gpad4)
+        g_mask = coarsen_bitmap(gpb.reshape(n * h * wd, -1), (1, gcg),
+                                (bm, bk))
+    dx = _mm(gm, wt.astype(jnp.float32), out_mask, g_mask, None, policy,
+             x_pre.dtype, epilogue=mask2d)
+    dx_pre = dx.reshape(n, h, wd, c)
 
     # ---- dW = patches(x)ᵀ @ dy — WG stage, input sparsity both sides ----
-    patches = _im2col(x, r, s, stride, (plh[0], plh[1], plw[0], plw[1]))
+    pad4 = (plh[0], plh[1], plw[0], plw[1])
+    patches = _im2col(x, r, s, stride, pad4)
     pm = patches.reshape(n * u * v, r * s * c).astype(jnp.float32)
     dym = dy32.reshape(n * u * v, m)
     pt = pm.T
-    pt_mask = _bitmap_padded(pt, bm, bk) if policy.use_input_sparsity_bp else None
-    dym_mask = _bitmap_padded(dym, bk, bn) if policy.use_input_sparsity_bp else None
+    pt_mask = None
+    if _needs_grad_bitmap(policy) and st.bitmap is not None:
+        # Xᵀ patch mask: forward bitmap -> patch bitmap -> block transpose.
+        pt_mask = _patch_bitmap(st, (n, h, wd, c), r, s, stride, pad4) \
+            .t_mask_for((bm, bk))
+    dym_mask = st_dy.mask_for((bk, bn))
     dw = _mm(pt, dym, None, pt_mask, dym_mask, policy, jnp.float32)
     return dx_pre, dw.reshape(r, s, c, m).astype(w.dtype)
 
@@ -148,40 +245,52 @@ def conv(x: jnp.ndarray, w: jnp.ndarray, stride: int, padding: str,
     """Plain conv2d (no fused ReLU): FP/BP input sparsity only.
 
     Used at MaxPool→CONV and input-layer boundaries where the paper notes
-    output sparsity is not applicable (Fig. 11 discussion).
+    output sparsity is not applicable (Fig. 11 discussion).  The input's
+    nonzero bitmap is still computed only once (one counted scan — x may be
+    signed, so the fused ReLU encode does not apply) and threaded to the
+    forward operand mask and the WG transposed mask.
     """
     y, _ = _conv_fwd(x, w, stride, padding, policy)
     return y
 
 
 def _conv_fwd(x, w, stride, padding, policy):
-    # Reuse relu_conv's forward on a pre-activation that is already
-    # non-negative?  No — x may be signed.  Run the same im2col GEMM without
-    # the relu.
     n, h, wd, c = x.shape
     r, s, _, m = w.shape
+    bm, bk, bn = policy.block
     plh = _pad_amounts(h, r, stride, padding)
     plw = _pad_amounts(wd, s, stride, padding)
-    patches = _im2col(x, r, s, stride, (plh[0], plh[1], plw[0], plw[1]))
+    pad4 = (plh[0], plh[1], plw[0], plw[1])
+    st = SparseTensor(x, None, None)
+    if policy.kernel_impl == "pallas" and (
+            policy.use_input_sparsity_fp or policy.use_input_sparsity_bp):
+        gc = conv_channel_granularity(c, policy.block)
+        st = SparseTensor(
+            x, scan_bitmap(x.reshape(n * h * wd, c), (1, gc), kind="act"),
+            (1, gc))
+    patches = _im2col(x, r, s, stride, pad4)
     u, v = patches.shape[1], patches.shape[2]
     pm = patches.reshape(n * u * v, r * s * c)
-    bm, bk, bn = policy.block
     a_mask = None
-    if policy.use_input_sparsity_fp and policy.kernel_impl == "pallas":
-        a_mask = _bitmap_padded(pm.astype(jnp.float32), bm, bk)
+    if policy.use_input_sparsity_fp and policy.kernel_impl == "pallas" \
+            and st.bitmap is not None:
+        a_mask = _patch_bitmap(st, (n, h, wd, c), r, s, stride, pad4) \
+            .mask_for((bm, bk))
     y = _mm(pm, w.reshape(r * s * c, m), None, a_mask, None, policy, x.dtype)
-    return y.reshape(n, u, v, m), (x, w)
+    return y.reshape(n, u, v, m), (st, w)
 
 
 def _conv_bwd(stride, padding, policy, res, dy):
-    x, w = res
+    st, w = res
+    x = st.data
     # Identical to relu_conv's backward with an all-ones mask and no output
-    # sparsity; implement by temporarily treating x as its own "activation".
+    # sparsity.
     n, h, wd, c = x.shape
     r, s, _, m = w.shape
     u, v = dy.shape[1], dy.shape[2]
     bm, bk, bn = policy.block
     dy32 = dy.astype(jnp.float32)
+    st_dy = _grad_sparse_tensor(dy32, policy, m)
     plh = _pad_amounts(h, r, stride, padding)
     plw = _pad_amounts(wd, s, stride, padding)
     dyd = _dilate_hw(dy32, stride)
@@ -190,19 +299,30 @@ def _conv_bwd(stride, padding, policy, res, dy):
     pg_h_hi = h - (hd + pg_h_lo - r + 1)
     pg_w_lo = s - 1 - plw[0]
     pg_w_hi = wd - (wdd + pg_w_lo - s + 1)
-    gpatches = _im2col(dyd, r, s, 1, (pg_h_lo, pg_h_hi, pg_w_lo, pg_w_hi))
+    gpad4 = (pg_h_lo, pg_h_hi, pg_w_lo, pg_w_hi)
+    gpatches = _im2col(dyd, r, s, 1, gpad4)
     gm = gpatches.reshape(n * h * wd, r * s * m)
     wt = jnp.flip(w, axis=(0, 1)).transpose(0, 1, 3, 2).reshape(r * s * m, c)
-    g_mask = _bitmap_padded(gm, bm, bk) if policy.use_input_sparsity_bp else None
+    g_mask = None
+    if st_dy.bitmap is not None:
+        gcg = st_dy.gran[1]
+        gfb4 = st_dy.bitmap.reshape(n, u, v, m // gcg)
+        gpb = _im2col(_dilate_hw(gfb4, stride), r, s, 1, gpad4)
+        g_mask = coarsen_bitmap(gpb.reshape(n * h * wd, -1), (1, gcg),
+                                (bm, bk))
     dx = _mm(gm, wt.astype(jnp.float32), None, g_mask, None, policy, x.dtype)
     dx = dx.reshape(n, h, wd, c)
 
-    patches = _im2col(x, r, s, stride, (plh[0], plh[1], plw[0], plw[1]))
+    pad4 = (plh[0], plh[1], plw[0], plw[1])
+    patches = _im2col(x, r, s, stride, pad4)
     pm = patches.reshape(n * u * v, r * s * c).astype(jnp.float32)
     dym = dy32.reshape(n * u * v, m)
     pt = pm.T
-    pt_mask = _bitmap_padded(pt, bm, bk) if policy.use_input_sparsity_bp else None
-    dym_mask = _bitmap_padded(dym, bk, bn) if policy.use_input_sparsity_bp else None
+    pt_mask = None
+    if st.bitmap is not None and _needs_grad_bitmap(policy):
+        pt_mask = _patch_bitmap(st, (n, h, wd, c), r, s, stride, pad4) \
+            .t_mask_for((bm, bk))
+    dym_mask = st_dy.mask_for((bk, bn))
     dw = _mm(pt, dym, None, pt_mask, dym_mask, policy, jnp.float32)
     return dx, dw.reshape(r, s, c, m).astype(w.dtype)
 

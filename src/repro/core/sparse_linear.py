@@ -11,6 +11,16 @@ that realizes all three of the paper's skipping opportunities:
               — INPUT sparsity of dy (zero gradient tiles skipped);
   wt-grad   : dW = relu(x_pre)ᵀ @ dy — INPUT sparsity on both operands.
 
+Sparsity metadata lifecycle (the FP/BP correlation, made structural): the
+forward pass computes the activation's fine bitmap EXACTLY ONCE — via the
+fused ``kernels.relu_encode`` pass that also applies the ReLU — and stashes
+it in the VJP residual as a ``SparseTensor``.  The backward pass then
+*derives* its out_mask (dX GEMM) and transposed operand mask (dW GEMM) from
+that bitmap by re-tiling, and scans the incoming gradient at most once,
+sharing the result between both backward GEMMs.  No dense tensor is ever
+scanned twice (audited by benchmarks/kernel_audit.bitmap_op_audit; the
+mask-derivation contract is documented in docs/bitmap_lifecycle.md).
+
 The op is *exact*: its VJP equals dense autodiff of relu→matmul bit-for-bit
 on the masked-out entries and to accumulation-order tolerance elsewhere
 (property-tested in tests/test_sparse_grad.py).
@@ -26,9 +36,17 @@ import jax.numpy as jnp
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 from .policy import SparsityPolicy
+from .sparse_tensor import (
+    SparseTensor,
+    linear_act_granularity,
+    linear_grad_granularity,
+    scan_bitmap,
+)
 
 
 def _bitmap_padded(x2d: jnp.ndarray, b0: int, b1: int) -> jnp.ndarray:
+    """Freshly-computed dense-scan bitmap — the ORACLE the threaded bitmaps
+    are property-tested against.  Not on the hot path anymore."""
     m, n = x2d.shape
     mp = (m + b0 - 1) // b0 * b0
     np_ = (n + b1 - 1) // b1 * b1
@@ -37,13 +55,26 @@ def _bitmap_padded(x2d: jnp.ndarray, b0: int, b1: int) -> jnp.ndarray:
     return kref.block_any_nonzero(x2d, b0, b1)
 
 
-def _mm(a, b, out_mask, a_mask, b_mask, policy: SparsityPolicy, out_dtype):
-    """Dispatch a masked matmul through the policy's kernel impl."""
+def _mm(a, b, out_mask, a_mask, b_mask, policy: SparsityPolicy, out_dtype,
+        epilogue: Optional[jnp.ndarray] = None):
+    """Dispatch a masked matmul through the policy's kernel impl.
+
+    ``epilogue`` is an (M, N) Hadamard multiplier fused into the kernel's
+    accumulator writeback (policy.fuse_epilogue) or applied as a separate
+    elementwise pass (ablation / xla_ref equivalence)."""
     if policy.kernel_impl == "pallas":
+        if epilogue is not None and not policy.fuse_epilogue:
+            out = kops.masked_matmul(
+                a, b, out_mask=out_mask, a_mask=a_mask, b_mask=b_mask,
+                block=policy.block, out_dtype=jnp.float32,
+                compact=policy.work_redistribution, interpret=policy.interpret,
+            )
+            return (out * epilogue.astype(jnp.float32)).astype(out_dtype)
         return kops.masked_matmul(
             a, b, out_mask=out_mask, a_mask=a_mask, b_mask=b_mask,
             block=policy.block, out_dtype=out_dtype,
-            compact=policy.work_redistribution, interpret=policy.interpret,
+            compact=policy.work_redistribution,
+            epilogue_mult=epilogue, interpret=policy.interpret,
         )
     # xla_ref: numerically-equivalent dense compute + masking.  The skipped
     # work is accounted by core.costmodel, not saved on this backend.
@@ -54,7 +85,23 @@ def _mm(a, b, out_mask, a_mask, b_mask, policy: SparsityPolicy, out_dtype):
         m, n = out.shape
         em = kref.expand_block_mask(out_mask.astype(jnp.float32), bm, bn)
         out = out * em[:m, :n]
+    if epilogue is not None:
+        out = out * epilogue.astype(jnp.float32)
     return out.astype(out_dtype)
+
+
+def _needs_act_bitmap(policy: SparsityPolicy) -> bool:
+    """Does any consumer of an activation bitmap exist under this policy?
+    Operand masks feed only the pallas kernels; out_mask also drives the
+    xla_ref masking path."""
+    if policy.use_output_sparsity:
+        return True
+    return policy.kernel_impl == "pallas" and (
+        policy.use_input_sparsity_fp or policy.use_input_sparsity_bp)
+
+
+def _needs_grad_bitmap(policy: SparsityPolicy) -> bool:
+    return policy.kernel_impl == "pallas" and policy.use_input_sparsity_bp
 
 
 # ---------------------------------------------------------------------------
@@ -85,36 +132,63 @@ def _act_grad_multiplier(x_pre, act: str):
     return (x_pre > 0).astype(jnp.float32)
 
 
+def _encode_act(x_pre: jnp.ndarray, policy: SparsityPolicy,
+                gran: Tuple[int, int]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(relu(x_pre), fine bitmap) — fused Pallas pass on the pallas impl,
+    one counted jnp scan on xla_ref.  Either way: ONE bitmap computation."""
+    if policy.kernel_impl == "pallas":
+        return kops.relu_encode(x_pre, block=gran, interpret=policy.interpret)
+    r = jnp.maximum(x_pre, jnp.zeros((), x_pre.dtype))
+    return r, scan_bitmap(r, gran, kind="act")
+
+
 def _act_matmul_fwd(x_pre, w, policy: SparsityPolicy, act: str):
-    x = _act(x_pre, act)
     bm, bk, bn = policy.block
+    if _needs_act_bitmap(policy):
+        gran = linear_act_granularity(policy.block)
+        r, bitmap = _encode_act(x_pre, policy, gran)
+        x = jnp.square(r) if act == "relu2" else r
+        st = SparseTensor(x_pre, bitmap, gran)
+    else:
+        x = _act(x_pre, act)
+        st = SparseTensor(x_pre, None, None)
     a_mask = None
     if policy.use_input_sparsity_fp and policy.kernel_impl == "pallas":
-        a_mask = _bitmap_padded(x.astype(jnp.float32), bm, bk)
+        a_mask = st.mask_for((bm, bk))
     y = _mm(x, w, None, a_mask, None, policy, x_pre.dtype)
-    return y, (x_pre, w)
+    return y, (st, w)
 
 
 def _act_matmul_bwd(policy: SparsityPolicy, act: str, res, dy):
-    x_pre, w = res
+    st, w = res
+    x_pre = st.data
     mult = _act_grad_multiplier(x_pre, act)       # zero exactly where x_pre<=0
     x = _act(x_pre, act)
     bm, bk, bn = policy.block
     dy32 = dy.astype(jnp.float32)
 
+    # The incoming gradient is scanned AT MOST ONCE; both backward GEMMs
+    # derive their operand masks from the same fine bitmap.
+    st_dy = SparseTensor(dy32, None, None)
+    if _needs_grad_bitmap(policy):
+        ggran = linear_grad_granularity(policy.block)
+        st_dy = SparseTensor(dy32, scan_bitmap(dy32, ggran, kind="grad"),
+                             ggran)
+
     # --- dx_pre = (dy @ Wᵀ) ⊙ σ'(x_pre): OUTPUT (+INPUT) sparsity ---
-    out_mask = _bitmap_padded(mult, bm, bn) \
-        if policy.use_output_sparsity else None
-    dy_mask = _bitmap_padded(dy32, bm, bk) \
-        if policy.use_input_sparsity_bp else None
-    dx = _mm(dy32, w.astype(jnp.float32).T, out_mask, dy_mask, None,
-             policy, jnp.float32)
-    dx_pre = (dx * mult).astype(x_pre.dtype)
+    # out_mask = the forward ReLU bitmap, re-tiled: footprint(σ'(x_pre)) ==
+    # footprint(relu(x_pre)) — the paper's §3.2 identity, zero recompute.
+    out_mask = st.mask_for((bm, bn)) if policy.use_output_sparsity else None
+    dy_mask = st_dy.mask_for((bm, bk))
+    dx_pre = _mm(dy32, w.astype(jnp.float32).T, out_mask, dy_mask, None,
+                 policy, x_pre.dtype, epilogue=mult)
 
     # --- dW = xᵀ @ dy: INPUT sparsity on both operands (WG stage) ---
+    # Xᵀ's mask is the SAME forward bitmap, block-transposed.
     xt = x.astype(jnp.float32).T
-    xt_mask = _bitmap_padded(xt, bm, bk) if policy.use_input_sparsity_bp else None
-    dyb_mask = _bitmap_padded(dy32, bk, bn) if policy.use_input_sparsity_bp else None
+    xt_mask = st.t_mask_for((bm, bk)) \
+        if _needs_grad_bitmap(policy) else None
+    dyb_mask = st_dy.mask_for((bk, bn))
     dw = _mm(xt, dy32, None, xt_mask, dyb_mask, policy, jnp.float32)
     return dx_pre, dw.astype(w.dtype)
 
@@ -129,7 +203,8 @@ def relu_matmul(x_pre: jnp.ndarray, w: jnp.ndarray, policy: SparsityPolicy):
 
 # ---------------------------------------------------------------------------
 # plain matmul with FP input sparsity (first layer of a chain, where the
-# input is raw data / dense): only the paper's FP-IN opportunity applies.
+# input is raw data / dense): only input-sparsity opportunities apply, but
+# the operand bitmap is still computed once and threaded to the WG stage.
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
@@ -140,23 +215,34 @@ def matmul(x: jnp.ndarray, w: jnp.ndarray, policy: SparsityPolicy):
 
 def _matmul_fwd(x, w, policy: SparsityPolicy):
     bm, bk, bn = policy.block
-    a_mask = None
-    if policy.use_input_sparsity_fp and policy.kernel_impl == "pallas":
-        a_mask = _bitmap_padded(x.astype(jnp.float32), bm, bk)
+    st = SparseTensor(x, None, None)
+    if policy.kernel_impl == "pallas" and (
+            policy.use_input_sparsity_fp or policy.use_input_sparsity_bp):
+        gran = linear_act_granularity(policy.block)
+        st = SparseTensor(x, scan_bitmap(x, gran, kind="act"), gran)
+    a_mask = st.mask_for((bm, bk)) \
+        if policy.use_input_sparsity_fp and policy.kernel_impl == "pallas" \
+        else None
     y = _mm(x, w, None, a_mask, None, policy, x.dtype)
-    return y, (x, w)
+    return y, (st, w)
 
 
 def _matmul_bwd(policy: SparsityPolicy, res, dy):
-    x, w = res
+    st, w = res
+    x = st.data
     bm, bk, bn = policy.block
     dy32 = dy.astype(jnp.float32)
-    dy_mask = _bitmap_padded(dy32, bm, bk) if policy.use_input_sparsity_bp else None
-    dx = _mm(dy32, w.astype(jnp.float32).T, None, dy_mask, None, policy, x.dtype)
+    st_dy = SparseTensor(dy32, None, None)
+    if _needs_grad_bitmap(policy):
+        ggran = linear_grad_granularity(policy.block)
+        st_dy = SparseTensor(dy32, scan_bitmap(dy32, ggran, kind="grad"),
+                             ggran)
+    dx = _mm(dy32, w.astype(jnp.float32).T, None, st_dy.mask_for((bm, bk)),
+             None, policy, x.dtype)
     xt = x.astype(jnp.float32).T
-    xt_mask = _bitmap_padded(xt, bm, bk) if policy.use_input_sparsity_bp else None
-    dyb_mask = _bitmap_padded(dy32, bk, bn) if policy.use_input_sparsity_bp else None
-    dw = _mm(xt, dy32, None, xt_mask, dyb_mask, policy, w.dtype)
+    xt_mask = st.t_mask_for((bm, bk)) if _needs_grad_bitmap(policy) else None
+    dw = _mm(xt, dy32, None, xt_mask, st_dy.mask_for((bk, bn)), policy,
+             w.dtype)
     return dx, dw
 
 

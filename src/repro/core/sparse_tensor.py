@@ -1,0 +1,151 @@
+"""SparseTensor — the bitmap-carrier threading FP sparsity into BP.
+
+The paper's core observation (§3.2) is that forward and backward sparsity
+are *correlated*: the ReLU bitmap captured while computing the forward pass
+IS the output-sparsity mask of the backward pass, and (transposed/re-tiled)
+also the input-sparsity mask of the weight-gradient GEMM.  This module makes
+that correlation structural:
+
+  * ``SparseTensor`` pairs a dense payload with a FINE-granularity block
+    bitmap computed exactly once (by the fused ``kernels.relu_encode`` on
+    the hot path, or one counted scan for signed data).  It is a pytree, so
+    it rides through ``jax.custom_vjp`` residuals unchanged.
+  * Every mask a backward GEMM needs is then *derived* — ``coarsen_bitmap``
+    (OR-reduce fine cells into coarser tiles) and ``transpose`` (swap block
+    axes) — pure bitmap arithmetic on arrays hundreds-to-thousands of times
+    smaller than the activations they describe.  Derivations are exact, not
+    conservative: an OR of any-nonzero sub-blocks equals any-nonzero of the
+    union, so every derived mask is bit-identical to a fresh dense scan
+    (property-tested in tests/test_bitmap_threading.py).
+
+Granularity contract: a bitmap at granularity (gr, gc) can be coarsened to
+any block (B0, B1) with gr | B0 and gc | B1, and transposed-then-coarsened
+to any (B0, B1) with gc | B0 and gr | B1.  The ``*_granularity`` helpers
+below pick the finest granularity that serves every consumer of a tensor,
+which degenerates to the block size itself for uniform blocks (zero
+overhead in the common case).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as kref
+from repro.kernels import stats
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def coarsen_bitmap(bitmap: jnp.ndarray, gran: Tuple[int, int],
+                   block: Tuple[int, int]) -> jnp.ndarray:
+    """(M/gr, N/gc) fine bitmap -> (ceil(M/B0), ceil(N/B1)) coarse bitmap.
+
+    Exact: the coarse cell is the OR of its member fine cells; ragged edges
+    are zero-padded (padding describes zero data, so OR-identity).
+    """
+    gr, gc = gran
+    b0, b1 = block
+    assert b0 % gr == 0 and b1 % gc == 0, (gran, block)
+    f0, f1 = b0 // gr, b1 // gc
+    r, c = bitmap.shape
+    rp, cp = _ceil_div(r, f0) * f0, _ceil_div(c, f1) * f1
+    if rp != r or cp != c:
+        bitmap = jnp.pad(bitmap, ((0, rp - r), (0, cp - c)))
+    return bitmap.reshape(rp // f0, f0, cp // f1, f1).max(axis=(1, 3)) \
+        .astype(jnp.int32)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SparseTensor:
+    """Dense payload + once-computed fine nonzero bitmap of a 2-D view.
+
+    ``data`` may be the tensor itself (GEMM path) or a 4-D NHWC activation
+    whose (N·H·W, C) flattening the bitmap describes (conv path).  ``gran``
+    is static metadata; ``bitmap`` is None when the policy needs no
+    sparsity metadata (DC), making the carrier free in that case.
+    """
+    data: jnp.ndarray
+    bitmap: Optional[jnp.ndarray]
+    gran: Optional[Tuple[int, int]]
+
+    # -- pytree protocol (gran is static aux data) --
+    def tree_flatten(self):
+        return (self.data, self.bitmap), self.gran
+
+    @classmethod
+    def tree_unflatten(cls, gran, children):
+        data, bitmap = children
+        return cls(data, bitmap, gran)
+
+    # -- mask derivation --
+    def mask_for(self, block: Tuple[int, int]) -> Optional[jnp.ndarray]:
+        """Block bitmap of the 2-D view at tile shape ``block``."""
+        if self.bitmap is None:
+            return None
+        return coarsen_bitmap(self.bitmap, self.gran, block)
+
+    def t_mask_for(self, block: Tuple[int, int]) -> Optional[jnp.ndarray]:
+        """Block bitmap of the TRANSPOSED 2-D view at ``block`` — the WG
+        stage's operand mask, derived without touching the data."""
+        if self.bitmap is None:
+            return None
+        gr, gc = self.gran
+        return coarsen_bitmap(self.bitmap.T, (gc, gr), block)
+
+
+# ---------------------------------------------------------------------------
+# Granularity selection
+# ---------------------------------------------------------------------------
+
+def linear_act_granularity(block: Tuple[int, int, int]) -> Tuple[int, int]:
+    """Finest granularity serving an activation X (T, K) of a GEMM layer:
+    a_mask (bm, bk) in FP, out_mask (bm, bn) in BP, Xᵀ mask (bm, bk) in WG
+    (transposed: needs gc | bm, gr | bk)."""
+    bm, bk, bn = block
+    gr = math.gcd(bm, bk)
+    return gr, math.gcd(gr, bn)
+
+
+def linear_grad_granularity(block: Tuple[int, int, int]) -> Tuple[int, int]:
+    """Finest granularity serving an incoming gradient dY (T, N): a-operand
+    mask (bm, bk) for the dX GEMM, b-operand mask (bk, bn) for the dW GEMM."""
+    bm, bk, bn = block
+    return math.gcd(bm, bk), math.gcd(bk, bn)
+
+
+def conv_channel_granularity(channels: int,
+                             block: Tuple[int, int, int]) -> int:
+    """Channel granularity for a conv tensor's (pixels, channels) view.
+
+    Row granularity is fixed at 1 (per pixel) so the bitmap stays spatially
+    addressable — patch (im2col) masks are then *derived* by gathering the
+    bitmap itself.  The channel granularity must divide the channel count
+    (tap segments in the im2col K-axis must tile evenly) and every block
+    edge a derived mask can take (bm for transposed WG masks, bk/bn for
+    operand masks)."""
+    bm, bk, bn = block
+    return math.gcd(math.gcd(channels, bm), math.gcd(bk, bn))
+
+
+# ---------------------------------------------------------------------------
+# Bitmap computation — the ONLY functions that scan tensor-sized data.
+# ---------------------------------------------------------------------------
+
+def scan_bitmap(x2d: jnp.ndarray, gran: Tuple[int, int],
+                *, kind: str = "act") -> jnp.ndarray:
+    """One counted dense scan -> fine bitmap (used for signed data — raw
+    inputs, incoming gradients — where no fused encode produced one)."""
+    gr, gc = gran
+    m, n = x2d.shape
+    mp, np_ = _ceil_div(m, gr) * gr, _ceil_div(n, gc) * gc
+    if mp != m or np_ != n:
+        x2d = jnp.pad(x2d, ((0, mp - m), (0, np_ - n)))
+    stats.record(f"scan:{kind}")
+    return kref.block_any_nonzero(x2d.astype(jnp.float32), gr, gc)

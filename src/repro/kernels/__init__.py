@@ -3,7 +3,7 @@
 Layout (per kernel): <name>.py — pl.pallas_call + BlockSpec tiling;
 ops.py — jit'd public wrappers; ref.py — pure-jnp oracles.
 """
-from . import ops, ref  # noqa: F401
+from . import ops, ref, stats  # noqa: F401
 from .ops import (  # noqa: F401
     masked_matmul,
     relu_bwd_masked,

@@ -83,6 +83,37 @@ def _mm_kernel(out_m_ref, a_m_ref, b_m_ref, a_ref, b_ref, o_ref, acc_ref):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _mm_epilogue_kernel(out_m_ref, a_m_ref, b_m_ref, a_ref, b_ref, mult_ref,
+                        o_ref, acc_ref):
+    """Predicated kernel + fused σ′-Hadamard epilogue: the final accumulator
+    write multiplies by the (bm, bn) tile of ``mult`` — the backward pass's
+    ``dx * σ'(z)`` never round-trips through HBM as a separate VPU pass."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    active = (
+        (out_m_ref[i, j] != 0)
+        & (a_m_ref[i, k] != 0)
+        & (b_m_ref[k, j] != 0)
+    )
+
+    @pl.when(active)
+    def _issue_mxu():
+        acc_ref[...] += jnp.dot(
+            a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+        )
+
+    @pl.when(k == nk - 1)
+    def _write():
+        o_ref[...] = (acc_ref[...] * mult_ref[...]).astype(o_ref.dtype)
+
+
 def masked_matmul_kernel(
     a: jnp.ndarray,
     b: jnp.ndarray,
@@ -94,9 +125,14 @@ def masked_matmul_kernel(
     bk: int,
     bn: int,
     out_dtype=jnp.float32,
+    epilogue_mult: Optional[jnp.ndarray] = None,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """Raw predicated kernel launch.  Shapes must be block-aligned."""
+    """Raw predicated kernel launch.  Shapes must be block-aligned.
+
+    ``epilogue_mult`` (M, N) f32, if given, is Hadamard-applied to each
+    output tile inside the kernel at accumulator-writeback time.
+    """
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)
@@ -106,18 +142,27 @@ def masked_matmul_kernel(
     assert a_mask.shape == (ni, nk), (a_mask.shape, (ni, nk))
     assert b_mask.shape == (nk, nj), (b_mask.shape, (nk, nj))
 
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, k, *_: (i, k)),
+        pl.BlockSpec((bk, bn), lambda i, j, k, *_: (k, j)),
+    ]
+    operands = [a, b]
+    kernel = _mm_kernel
+    if epilogue_mult is not None:
+        assert epilogue_mult.shape == (m, n), (epilogue_mult.shape, (m, n))
+        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, k, *_: (i, j)))
+        operands.append(epilogue_mult.astype(jnp.float32))
+        kernel = _mm_epilogue_kernel
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(ni, nj, nk),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k, *_: (i, k)),
-            pl.BlockSpec((bk, bn), lambda i, j, k, *_: (k, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k, *_: (i, j)),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
     )
     fn = pl.pallas_call(
-        _mm_kernel,
+        kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         interpret=interpret,
@@ -126,8 +171,7 @@ def masked_matmul_kernel(
         out_mask.astype(jnp.int32),
         a_mask.astype(jnp.int32),
         b_mask.astype(jnp.int32),
-        a,
-        b,
+        *operands,
     )
 
 
@@ -165,6 +209,36 @@ def _mm_compact_kernel(
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _mm_compact_epilogue_kernel(
+    ii_ref, jj_ref, n_act_ref, a_m_ref, b_m_ref, a_ref, b_ref, mult_ref,
+    o_ref, acc_ref
+):
+    """Compacted schedule + fused σ′-Hadamard epilogue (mult tile gathered
+    at the active coordinate (ii[s], jj[s]) via scalar prefetch)."""
+    s = pl.program_id(0)
+    k = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(k == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    i = ii_ref[s]
+    j = jj_ref[s]
+    live = s < n_act_ref[0]
+    active = live & (a_m_ref[i, k] != 0) & (b_m_ref[k, j] != 0)
+
+    @pl.when(active)
+    def _issue_mxu():
+        acc_ref[...] += jnp.dot(
+            a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+        )
+
+    @pl.when(k == nk - 1)
+    def _write():
+        o_ref[...] = (acc_ref[...] * mult_ref[...]).astype(o_ref.dtype)
+
+
 def compact_masked_matmul_kernel(
     a: jnp.ndarray,
     b: jnp.ndarray,
@@ -178,6 +252,7 @@ def compact_masked_matmul_kernel(
     bk: int,
     bn: int,
     out_dtype=jnp.float32,
+    epilogue_mult: Optional[jnp.ndarray] = None,
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Returns the COMPACTED output (S, bm, bn); caller scatters to (M, N).
@@ -193,18 +268,28 @@ def compact_masked_matmul_kernel(
     (s_cap,) = ii.shape
     assert jj.shape == (s_cap,)
 
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda s, k, ii, jj, *_: (ii[s], k)),
+        pl.BlockSpec((bk, bn), lambda s, k, ii, jj, *_: (k, jj[s])),
+    ]
+    operands = [a, b]
+    kernel = _mm_compact_kernel
+    if epilogue_mult is not None:
+        assert epilogue_mult.shape == (m, n), (epilogue_mult.shape, (m, n))
+        in_specs.append(
+            pl.BlockSpec((bm, bn), lambda s, k, ii, jj, *_: (ii[s], jj[s])))
+        operands.append(epilogue_mult.astype(jnp.float32))
+        kernel = _mm_compact_epilogue_kernel
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=5,
         grid=(s_cap, nk),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda s, k, ii, jj, *_: (ii[s], k)),
-            pl.BlockSpec((bk, bn), lambda s, k, ii, jj, *_: (k, jj[s])),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, bm, bn), lambda s, k, *_: (s, 0, 0)),
         scratch_shapes=[pltpu.VMEM((1, bm, bn), jnp.float32)],
     )
     fn = pl.pallas_call(
-        _mm_compact_kernel,
+        kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((s_cap, bm, bn), out_dtype),
         interpret=interpret,
@@ -215,6 +300,5 @@ def compact_masked_matmul_kernel(
         n_active.astype(jnp.int32),
         a_mask.astype(jnp.int32),
         b_mask.astype(jnp.int32),
-        a,
-        b,
+        *operands,
     )

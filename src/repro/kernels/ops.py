@@ -17,7 +17,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from . import ref
+from . import ref, stats
 from .masked_matmul import compact_masked_matmul_kernel, masked_matmul_kernel
 from .relu_encode import relu_encode_kernel
 
@@ -61,6 +61,7 @@ def masked_matmul(
     out_dtype=jnp.float32,
     compact: bool = False,
     max_active_blocks: Optional[int] = None,
+    epilogue_mult: Optional[jnp.ndarray] = None,
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     """Block-sparse ``a @ b`` with output/input sparsity skipping.
@@ -70,7 +71,12 @@ def masked_matmul(
 
     ``compact=True`` routes through the work-redistribution schedule: the
     grid walks only active output tiles (queue capacity
-    ``max_active_blocks``, default = all tiles).
+    ``max_active_blocks``, default = all tiles).  If more tiles are live
+    than the queue holds, the call falls back to the predicated schedule —
+    never a silent truncation.
+
+    ``epilogue_mult`` (M, N): fused Hadamard applied to the output inside
+    the kernel (the backward σ′ multiply), saving a full-size VPU pass.
     """
     m, k = a.shape
     k2, n = b.shape
@@ -81,6 +87,10 @@ def masked_matmul(
 
     a_p = _pad_to(a, mp, kp)
     b_p = _pad_to(b, kp, np_)
+    mult_p = None
+    if epilogue_mult is not None:
+        assert epilogue_mult.shape == (m, n), (epilogue_mult.shape, (m, n))
+        mult_p = _pad_to(epilogue_mult.astype(jnp.float32), mp, np_)
 
     def _pad_mask(mask, nb0, nb1):
         if mask is None:
@@ -96,36 +106,53 @@ def masked_matmul(
     bmask = _pad_mask(b_mask, nk, nj)
 
     itp = _use_interpret(interpret)
+
+    def _predicated():
+        return masked_matmul_kernel(
+            a_p, b_p, om, am, bmask,
+            bm=bm, bk=bk, bn=bn, out_dtype=out_dtype,
+            epilogue_mult=mult_p, interpret=itp,
+        )
+
     if compact:
         s_cap = max_active_blocks if max_active_blocks is not None else ni * nj
         # Active-queue construction: stable-order the coordinates of set
         # bits to the front (the WDU's "lexicographically smallest state
         # tuple first" order is row-major (i, j) — identical here).
         flat = om.reshape(-1)
+        n_live = flat.sum()
         order = jnp.argsort(-flat, stable=True)  # active tiles first
         order = order[:s_cap]
         ii = (order // nj).astype(jnp.int32)
         jj = (order % nj).astype(jnp.int32)
-        n_active = jnp.minimum(flat.sum(), s_cap).reshape(1)
-        compacted = compact_masked_matmul_kernel(
-            a_p, b_p, ii, jj, n_active, am, bmask,
-            bm=bm, bk=bk, bn=bn, out_dtype=out_dtype, interpret=itp,
-        )
-        # Scatter the queue back to dense tile layout.  Padding steps carry
-        # zero tiles at coords (ii, jj) of dead queue slots — we direct dead
-        # slots at (0, 0) via scatter-ADD so they are no-ops.
-        live = (jnp.arange(s_cap) < n_active[0]).astype(out_dtype)
-        compacted = compacted * live[:, None, None]
-        ii = jnp.where(jnp.arange(s_cap) < n_active[0], ii, 0)
-        jj = jnp.where(jnp.arange(s_cap) < n_active[0], jj, 0)
-        out_tiles = jnp.zeros((ni, nj, bm, bn), out_dtype)
-        out_tiles = out_tiles.at[ii, jj].add(compacted)
-        out = out_tiles.transpose(0, 2, 1, 3).reshape(mp, np_)
+        n_active = jnp.minimum(n_live, s_cap).reshape(1)
+
+        def _compact():
+            compacted = compact_masked_matmul_kernel(
+                a_p, b_p, ii, jj, n_active, am, bmask,
+                bm=bm, bk=bk, bn=bn, out_dtype=out_dtype,
+                epilogue_mult=mult_p, interpret=itp,
+            )
+            # Scatter the queue back to dense tile layout.  Padding steps
+            # carry zero tiles at coords (ii, jj) of dead queue slots — we
+            # direct dead slots at (0, 0) via scatter-ADD so they are no-ops.
+            live = (jnp.arange(s_cap) < n_active[0]).astype(out_dtype)
+            masked = compacted * live[:, None, None]
+            si = jnp.where(jnp.arange(s_cap) < n_active[0], ii, 0)
+            sj = jnp.where(jnp.arange(s_cap) < n_active[0], jj, 0)
+            out_tiles = jnp.zeros((ni, nj, bm, bn), out_dtype)
+            out_tiles = out_tiles.at[si, sj].add(masked)
+            return out_tiles.transpose(0, 2, 1, 3).reshape(mp, np_)
+
+        if s_cap >= ni * nj:
+            out = _compact()          # queue provably cannot overflow
+        else:
+            # Queue-capacity overflow would silently drop live tiles.  The
+            # live count is a traced value, so detect at runtime and fall
+            # back to the predicated (full-grid) schedule — exact always.
+            out = jax.lax.cond(n_live > s_cap, _predicated, _compact)
     else:
-        out = masked_matmul_kernel(
-            a_p, b_p, om, am, bmask,
-            bm=bm, bk=bk, bn=bn, out_dtype=out_dtype, interpret=itp,
-        )
+        out = _predicated()
     return out[:m, :n]
 
 
@@ -135,13 +162,26 @@ def relu_encode(
     block: Tuple[int, int] = (DEFAULT_BLOCK[0], DEFAULT_BLOCK[2]),
     interpret: Optional[bool] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Fused relu(z) + block bitmap.  Pads, launches, unpads."""
+    """Fused relu(z) + block bitmap at granularity ``block``.
+
+    Pads, launches, unpads.  The launch tile is decoupled from the bitmap
+    granularity (≥8 rows per grid step), so fine granularities — down to
+    per-row bitmaps, which the conv path needs for im2col-derivable
+    metadata — stay cheap to launch.
+
+    This is THE forward-pass bitmap computation: one fused pass per
+    activation per step; every downstream mask is derived from its result.
+    """
     m, n = z.shape
     bm, bn = block
-    mp, np_ = _ceil_to(m, bm), _ceil_to(n, bn)
+    # Launch slab: a multiple of the bitmap granularity covering >=8 rows.
+    lr = bm * max(1, -(-8 // bm))
+    mp, np_ = _ceil_to(m, lr), _ceil_to(n, bn)
     z_p = _pad_to(z, mp, np_)
-    y, bitmap = relu_encode_kernel(z_p, bm=bm, bn=bn, interpret=_use_interpret(interpret))
-    return y[:m, :n], bitmap
+    stats.record("encode:act")
+    y, bitmap = relu_encode_kernel(z_p, bm=bm, bn=bn, lr=lr, lc=np_,
+                                   interpret=_use_interpret(interpret))
+    return y[:m, :n], bitmap[: _ceil_to(m, bm) // bm, :]
 
 
 def relu_bwd_masked(
@@ -173,13 +213,14 @@ def relu_bwd_masked(
         kp = _ceil_to(dy.shape[1], bk)
         a_mask = _block_bitmap(_pad_to(dy.astype(jnp.float32), mp, kp), bm, bk)
 
-    out = masked_matmul(
+    # Fused σ′-Hadamard epilogue: partially-live tiles are masked inside the
+    # kernel at writeback (free on the ASIC's output bitmap; zero extra HBM
+    # round-trips here).
+    return masked_matmul(
         dy, w_t, out_mask=out_mask, a_mask=a_mask, b_mask=None,
-        block=block, out_dtype=jnp.float32, compact=compact, interpret=interpret,
+        block=block, out_dtype=out_dtype, compact=compact,
+        epilogue_mult=relu_mask.astype(jnp.float32), interpret=interpret,
     )
-    # Elementwise Hadamard for partially-live tiles (free on the ASIC's
-    # output bitmap; one VPU pass here).
-    return (out * relu_mask.astype(jnp.float32)).astype(out_dtype)
 
 
 def weight_grad_masked(

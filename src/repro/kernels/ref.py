@@ -43,6 +43,7 @@ def masked_matmul(
     bk: int,
     bn: int,
     out_dtype=jnp.float32,
+    epilogue_mult: Optional[jnp.ndarray] = None,  # (M, N) fused Hadamard
 ) -> jnp.ndarray:
     """Oracle for the block-sparse GEMM.
 
@@ -69,6 +70,8 @@ def masked_matmul(
     if out_mask is not None:
         # Skipped output blocks are exact zeros.
         out = out * expand_block_mask(out_mask.astype(jnp.float32), bm, bn)
+    if epilogue_mult is not None:
+        out = out * epilogue_mult.astype(jnp.float32)
     return out.astype(out_dtype)
 
 

@@ -2,12 +2,21 @@
 
 The paper's Encoder unit (§4.1, Fig. 8a) produces non-zero offset indices of
 a freshly computed feature map once per layer, amortized over O(M·k²) reuse.
-The TPU analogue emits, in the same pass that applies the ReLU, the
-block-granular bitmap that the backward pass will consume for OUTPUT
-sparsity — so sparsity metadata is a free byproduct of the forward pass,
+The TPU analogue emits, in the same pass that applies the ReLU, a
+*fine-granularity* block bitmap that the rest of the training step derives
+every mask it needs from (FP input masks, BP output masks, WG transposed
+masks) — so sparsity metadata is a free byproduct of the forward pass,
 exactly as in the paper.
+
+The bitmap granularity (gr, gc) is decoupled from the launch tile (lr, lc):
+one kernel invocation covers an (lr, lc) slab of the activation and reduces
+it to an (lr//gr, lc//gc) sub-bitmap with a single reshape-max, so even
+per-row granularities (needed by the conv path, where the bitmap must stay
+spatially addressable for im2col derivation) launch with a coarse grid.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -19,10 +28,14 @@ except ImportError:  # pragma: no cover
     pltpu = None
 
 
-def _relu_encode_kernel(z_ref, y_ref, bm_ref):
+def _relu_encode_kernel(z_ref, y_ref, bm_ref, *, gr: int, gc: int):
     y = jnp.maximum(z_ref[...], jnp.zeros((), dtype=z_ref.dtype))
     y_ref[...] = y
-    bm_ref[0, 0] = jnp.any(y > 0).astype(jnp.int32)
+    lr, lc = y.shape
+    yb = y.reshape(lr // gr, gr, lc // gc, gc)
+    # y >= 0 everywhere, so max > 0 <=> the sub-block has a live activation.
+    bm_ref[...] = (jnp.max(yb.astype(jnp.float32), axis=(1, 3)) > 0) \
+        .astype(jnp.int32)
 
 
 def relu_encode_kernel(
@@ -30,23 +43,34 @@ def relu_encode_kernel(
     *,
     bm: int,
     bn: int,
+    lr: int = 0,
+    lc: int = 0,
     interpret: bool = False,
 ):
-    """Returns (relu(z), bitmap) with bitmap shape (M//bm, N//bn) int32."""
+    """Returns (relu(z), bitmap) with bitmap shape (M//bm, N//bn) int32.
+
+    (bm, bn) is the BITMAP granularity; (lr, lc) the launch tile (defaults:
+    whole array — callers size it; the ops wrapper picks ~8-row slabs so
+    fine granularities never explode the grid).
+    """
     m, n = z.shape
-    assert m % bm == 0 and n % bn == 0, (z.shape, bm, bn)
-    ni, nj = m // bm, n // bn
+    lr = lr or m
+    lc = lc or n
+    assert m % lr == 0 and n % lc == 0, (z.shape, lr, lc)
+    assert lr % bm == 0 and lc % bn == 0, (lr, lc, bm, bn)
+    ni, nj = m // lr, n // lc
+    fr, fc = lr // bm, lc // bn
     fn = pl.pallas_call(
-        _relu_encode_kernel,
+        functools.partial(_relu_encode_kernel, gr=bm, gc=bn),
         grid=(ni, nj),
-        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        in_specs=[pl.BlockSpec((lr, lc), lambda i, j: (i, j))],
         out_specs=[
-            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((lr, lc), lambda i, j: (i, j)),
+            pl.BlockSpec((fr, fc), lambda i, j: (i, j)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((m, n), z.dtype),
-            jax.ShapeDtypeStruct((ni, nj), jnp.int32),
+            jax.ShapeDtypeStruct((m // bm, n // bn), jnp.int32),
         ],
         interpret=interpret,
     )

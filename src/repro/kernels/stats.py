@@ -1,0 +1,53 @@
+"""Bitmap-op instrumentation: how many times per step is sparsity metadata
+*computed* (a dense scan / fused encode over tensor-sized data), as opposed
+to *derived* (coarsen / transpose / im2col on an existing bitmap)?
+
+The paper's Encoder produces each layer's sparsity metadata exactly once per
+pass and amortizes it over O(M·k²) reuse (§4.1).  The seed code instead
+re-scanned activations up to three times per layer per step.  This counter
+makes the difference auditable: ``benchmarks/kernel_audit.bitmap_op_audit``
+asserts exactly ONE computation per activation per training step.
+
+Counts are recorded at Python trace time, so one eager fwd+bwd (or one
+trace of a jitted step) yields the per-step op count.  Derivations are
+deliberately NOT recorded — they are pure bitmap arithmetic, the cheap
+"free byproduct" reuse the paper is about.
+"""
+from __future__ import annotations
+
+import collections
+import contextlib
+from typing import Dict
+
+_COUNTS: "collections.Counter[str]" = collections.Counter()
+
+
+def record(kind: str) -> None:
+    """Register one bitmap *computation*.  ``kind`` is ``<how>:<what>``:
+    how ∈ {encode, scan} (fused-kernel vs standalone dense scan),
+    what ∈ {act, grad} (activation-derived vs incoming-gradient data)."""
+    _COUNTS[kind] += 1
+
+
+def reset() -> None:
+    _COUNTS.clear()
+
+
+def counts() -> Dict[str, int]:
+    return dict(_COUNTS)
+
+
+def total(what: str = "") -> int:
+    """Total computations, optionally filtered by the ``:<what>`` suffix."""
+    return sum(v for k, v in _COUNTS.items()
+               if not what or k.endswith(":" + what))
+
+
+@contextlib.contextmanager
+def counting():
+    """Scoped counter: resets on entry, yields the live ``counts`` getter."""
+    reset()
+    try:
+        yield counts
+    finally:
+        pass

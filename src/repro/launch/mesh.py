@@ -6,7 +6,28 @@ host platform while tests/benches must see the real single device.
 """
 from __future__ import annotations
 
+from typing import Sequence, Tuple
+
 import jax
+from jax.sharding import AbstractMesh
+
+
+def make_abstract_mesh(shape: Sequence[int],
+                       axes: Sequence[str]) -> AbstractMesh:
+    """Device-free AbstractMesh from parallel (shape, axes) sequences.
+
+    jax's ``AbstractMesh`` constructor takes a single tuple of
+    ``(axis_name, size)`` pairs (and has changed signature across jax
+    releases) — this helper is the ONE place that knows that, so tests and
+    library code agree on a construction API mirroring ``jax.make_mesh``.
+    """
+    assert len(shape) == len(axes), (shape, axes)
+    try:
+        # jax <= 0.4.x: AbstractMesh(shape_tuple) of (name, size) pairs.
+        return AbstractMesh(tuple(zip(axes, shape)))
+    except TypeError:
+        # jax >= 0.5: AbstractMesh(axis_sizes, axis_names).
+        return AbstractMesh(tuple(shape), tuple(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

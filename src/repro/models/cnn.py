@@ -23,6 +23,7 @@ import jax.numpy as jnp
 
 from repro.core.policy import DC, SparsityPolicy
 from repro.core.sparse_conv import conv as sconv, relu_conv
+from repro.core.sparse_linear import matmul as smatmul
 from repro.core.costmodel import ConvSpec
 
 Params = Dict[str, Any]
@@ -285,7 +286,12 @@ class CNNModel:
         if is_relu:
             x = jnp.maximum(x, 0)
         x = jnp.mean(x, axis=(1, 2))             # global average pool
-        return x @ params["head"]["w"]
+        # Head GEMM through the sparse-aware unit: the pooled feature (post
+        # global-mean, so typically dense) contributes no FP skipping, but
+        # its bitmap is computed once and threaded to the WG stage, and the
+        # incoming logit gradient's masks are shared across both backward
+        # GEMMs — same metadata contract as every conv layer.
+        return smatmul(x, params["head"]["w"], policy)
 
     def loss(self, params: Params, images, labels,
              policy: SparsityPolicy = DC) -> jnp.ndarray:

@@ -1,0 +1,220 @@
+"""The PR's contract: forward-pass bitmaps are computed ONCE and every
+backward mask is *derived* from them — and the derivations are bit-identical
+to freshly-computed dense scans (the ``_bitmap_padded`` oracle).
+
+Three property families, as deterministic sweeps:
+  1. threaded forward bitmap == dense-scan oracle, for act_matmul and
+     relu_conv (stride ∈ {1, 2}, padding ∈ {SAME, VALID});
+  2. gradients stay exact vs dense autodiff after the threading refactor
+     (incl. the fused σ'-epilogue and its ablation);
+  3. the bitmap-op counter: exactly one activation bitmap computation and
+     at most one gradient scan per unit per training step.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import policy as pol
+from repro.core.sparse_conv import (
+    _im2col, _pad_amounts, _patch_bitmap, _relu_conv_fwd, conv as sconv,
+    relu_conv,
+)
+from repro.core.sparse_linear import (
+    _act_matmul_fwd, _bitmap_padded, act_matmul, relu_matmul,
+)
+from repro.core.sparse_tensor import (
+    SparseTensor, coarsen_bitmap, conv_channel_granularity,
+    linear_act_granularity,
+)
+from repro.kernels import stats
+
+PALLAS = pol.IN_OUT_WR.with_(kernel_impl="pallas", block=(8, 16, 8))
+PALLAS_U = pol.IN_OUT.with_(kernel_impl="pallas", block=(16, 16, 16))
+
+
+def _rand(shape, key, sparsify=0.5):
+    rng = np.random.default_rng(key)
+    x = rng.standard_normal(shape).astype(np.float32)
+    if sparsify:
+        x *= rng.random(shape) > sparsify
+    return jnp.asarray(x)
+
+
+# ---------------------------------------------------------------------------
+# 1. threaded bitmap == freshly-scanned oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", [PALLAS, PALLAS_U])
+def test_act_matmul_threaded_masks_match_oracle(policy):
+    bm, bk, bn = policy.block
+    x_pre = _rand((37, 29), 0)
+    w = _rand((29, 23), 1, 0.0)
+    _, (st, _) = _act_matmul_fwd(x_pre, w, policy, "relu")
+    assert st.bitmap is not None
+    x = jnp.maximum(x_pre, 0)
+    # FP operand mask (bm, bk)
+    np.testing.assert_array_equal(
+        st.mask_for((bm, bk)), _bitmap_padded(x, bm, bk))
+    # BP out_mask (bm, bn) over the σ' footprint == relu footprint
+    mult = (x_pre > 0).astype(jnp.float32)
+    np.testing.assert_array_equal(
+        st.mask_for((bm, bn)), _bitmap_padded(mult, bm, bn))
+    # WG transposed operand mask (bm, bk) over Xᵀ
+    np.testing.assert_array_equal(
+        st.t_mask_for((bm, bk)), _bitmap_padded(x.T, bm, bk))
+
+
+@pytest.mark.parametrize("stride,padding", [(1, "SAME"), (2, "SAME"),
+                                            (1, "VALID"), (2, "VALID")])
+@pytest.mark.parametrize("policy", [PALLAS, PALLAS_U])
+def test_relu_conv_threaded_masks_match_oracle(stride, padding, policy):
+    bm, bk, bn = policy.block
+    n, h, wd, c = 2, 9, 11, 5
+    x_pre = _rand((n, h, wd, c), 2)
+    w = _rand((3, 3, c, 7), 3, 0.0)
+    _, (st, _) = _relu_conv_fwd(x_pre, w, stride, padding, policy)
+    assert st.bitmap is not None
+    x = jnp.maximum(x_pre, 0)
+    # out_mask over the (N·H·W, C) σ' footprint
+    mask2d = (x_pre > 0).reshape(n * h * wd, c).astype(jnp.float32)
+    np.testing.assert_array_equal(
+        st.mask_for((bm, bn)), _bitmap_padded(mask2d, bm, bn))
+    # patch (im2col) masks vs a fresh scan of the actual patch matrix
+    plh = _pad_amounts(h, 3, stride, padding)
+    plw = _pad_amounts(wd, 3, stride, padding)
+    pad4 = (plh[0], plh[1], plw[0], plw[1])
+    pm = _im2col(x, 3, 3, stride, pad4)
+    pm = pm.reshape(-1, 3 * 3 * c)
+    pb = _patch_bitmap(st, (n, h, wd, c), 3, 3, stride, pad4)
+    np.testing.assert_array_equal(
+        pb.mask_for((bm, bk)), _bitmap_padded(pm, bm, bk))
+    np.testing.assert_array_equal(
+        pb.t_mask_for((bm, bk)), _bitmap_padded(pm.T, bm, bk))
+
+
+def test_coarsen_bitmap_is_exact_or_reduce():
+    rng = np.random.default_rng(7)
+    x = jnp.asarray((rng.random((40, 24)) > 0.8).astype(np.float32))
+    fine = _bitmap_padded(x, 2, 4)           # (20, 6) at gran (2, 4)
+    np.testing.assert_array_equal(
+        coarsen_bitmap(fine, (2, 4), (8, 8)), _bitmap_padded(x, 8, 8))
+    # ragged edges: coarsen pads fine bitmap with zeros, oracle pads data
+    np.testing.assert_array_equal(
+        coarsen_bitmap(fine, (2, 4), (16, 16)), _bitmap_padded(x, 16, 16))
+
+
+# ---------------------------------------------------------------------------
+# 2. gradients stay exact vs dense autodiff
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", [
+    PALLAS,
+    PALLAS_U,
+    PALLAS_U.with_(fuse_epilogue=False),     # ablation: separate VPU pass
+    pol.IN_OUT,                              # xla_ref threading path
+])
+def test_act_matmul_grads_exact_after_threading(policy):
+    # x_pre continuous (no exact zeros): σ'(0)=0 vs dense-autodiff tie
+    # handling is a convention choice, not a threading property.  Negatives
+    # give ~50% activation sparsity for the masks to act on.
+    x = _rand((37, 29), 10, 0.0)
+    w = _rand((29, 23), 11, 0.0)
+    ct = _rand((37, 23), 12, 0.7)
+    y, vjp = jax.vjp(lambda x, w: relu_matmul(x, w, policy), x, w)
+    yd, vjpd = jax.vjp(lambda x, w: jnp.maximum(x, 0) @ w, x, w)
+    np.testing.assert_allclose(y, yd, rtol=1e-4, atol=1e-4)
+    for g, gd in zip(vjp(ct), vjpd(ct)):
+        np.testing.assert_allclose(g, gd, rtol=2e-4, atol=2e-4)
+    # masked-out rows of dx are EXACT zeros (losslessness of the epilogue)
+    dx = vjp(ct)[0]
+    assert np.all(np.asarray(dx)[np.asarray(x) < 0] == 0.0)
+
+
+@pytest.mark.parametrize("stride,padding", [(1, "SAME"), (2, "SAME"),
+                                            (1, "VALID"), (2, "VALID")])
+@pytest.mark.parametrize("policy", [PALLAS, PALLAS_U,
+                                    PALLAS_U.with_(fuse_epilogue=False)])
+def test_relu_conv_grads_exact_after_threading(stride, padding, policy):
+    x = _rand((2, 9, 11, 5), 13, 0.0)     # continuous pre-activation
+    w = _rand((3, 3, 5, 7), 14, 0.0)
+
+    def dense(x, w):
+        return jax.lax.conv_general_dilated(
+            jnp.maximum(x, 0), w, (stride, stride), padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+    f = lambda x, w: (relu_conv(x, w, stride, padding, policy) ** 2).sum()
+    g = lambda x, w: (dense(x, w) ** 2).sum()
+    np.testing.assert_allclose(f(x, w), g(x, w), rtol=1e-4)
+    ga, gb = jax.grad(f, (0, 1))(x, w), jax.grad(g, (0, 1))(x, w)
+    for a, b in zip(ga, gb):
+        np.testing.assert_allclose(a, b, rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("stride,padding", [(1, "SAME"), (2, "VALID")])
+def test_plain_conv_grads_exact_after_threading(stride, padding):
+    policy = PALLAS_U
+    x = _rand((2, 8, 8, 4), 15, 0.0)         # signed input (post-pool case)
+    w = _rand((3, 3, 4, 6), 16, 0.0)
+
+    def dense(x, w):
+        return jax.lax.conv_general_dilated(
+            x, w, (stride, stride), padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+    f = lambda x, w: (sconv(x, w, stride, padding, policy) ** 2).sum()
+    g = lambda x, w: (dense(x, w) ** 2).sum()
+    np.testing.assert_allclose(f(x, w), g(x, w), rtol=1e-4)
+    for a, b in zip(jax.grad(f, (0, 1))(x, w), jax.grad(g, (0, 1))(x, w)):
+        np.testing.assert_allclose(a, b, rtol=3e-4, atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# 3. the audit property: one bitmap computation per tensor per step
+# ---------------------------------------------------------------------------
+
+def _grad_eagerly(f, *args):
+    return jax.grad(f, tuple(range(len(args))))(*args)
+
+
+def test_act_matmul_one_bitmap_op_per_step():
+    x = _rand((37, 29), 20)
+    w = _rand((29, 23), 21, 0.0)
+    stats.reset()
+    _grad_eagerly(lambda x, w: (act_matmul(x, w, PALLAS, "relu") ** 2).sum(),
+                  x, w)
+    assert stats.total("act") == 1, stats.counts()   # fused fwd encode only
+    assert stats.total("grad") == 1, stats.counts()  # one dy scan, 2 masks
+
+
+@pytest.mark.parametrize("stride,padding", [(1, "SAME"), (2, "VALID")])
+def test_relu_conv_one_bitmap_op_per_step(stride, padding):
+    x = _rand((2, 9, 11, 5), 22)
+    w = _rand((3, 3, 5, 7), 23, 0.0)
+    stats.reset()
+    _grad_eagerly(
+        lambda x, w: (relu_conv(x, w, stride, padding, PALLAS) ** 2).sum(),
+        x, w)
+    assert stats.total("act") == 1, stats.counts()
+    assert stats.total("grad") == 1, stats.counts()
+
+
+def test_dc_policy_computes_no_bitmaps():
+    x = _rand((16, 16), 24)
+    w = _rand((16, 8), 25, 0.0)
+    stats.reset()
+    _grad_eagerly(lambda x, w: (act_matmul(x, w, pol.DC, "relu") ** 2).sum(),
+                  x, w)
+    assert stats.total() == 0, stats.counts()
+
+
+def test_granularity_helpers_divide_all_consumers():
+    for block in [(8, 16, 8), (16, 16, 16), (128, 128, 128), (16, 8, 32)]:
+        bm, bk, bn = block
+        gr, gc = linear_act_granularity(block)
+        assert bm % gr == 0 and bk % gr == 0          # rows + transposed cols
+        assert bk % gc == 0 and bn % gc == 0 and bm % gc == 0
+        for ch in (5, 16, 64, 384):
+            g = conv_channel_granularity(ch, block)
+            assert ch % g == 0 and bm % g == 0 and bk % g == 0 and bn % g == 0

@@ -3,12 +3,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCHS
 from repro.configs.base import ALL_SHAPES
 from repro.configs.registry import decode_input_specs, train_input_specs
 from repro.data.pipeline import image_batch, lm_batch
+from repro.launch.mesh import make_abstract_mesh
 from repro.models.transformer import lm_init
 from repro.sharding import partition
 
@@ -48,8 +49,8 @@ def test_image_batch_zero_mean():
 
 
 MESHES = [
-    AbstractMesh((16, 16), ("data", "model")),
-    AbstractMesh((2, 16, 16), ("pod", "data", "model")),
+    make_abstract_mesh((16, 16), ("data", "model")),
+    make_abstract_mesh((2, 16, 16), ("pod", "data", "model")),
 ]
 
 

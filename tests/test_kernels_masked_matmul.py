@@ -107,3 +107,36 @@ def test_compact_capacity_bound():
                             compact=True, max_active_blocks=n_active)
     want = ref.masked_matmul(a, b, out_mask=bmap, bm=8, bk=8, bn=8)
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_compact_queue_overflow_falls_back_exact():
+    """Regression: live tiles > queue capacity used to be silently DROPPED
+    (n_active = min(live, cap)), producing wrong results with no error.
+    Now overflow is detected at runtime and the call falls back to the
+    predicated schedule — results stay exact."""
+    m = n = k = 32
+    a, b, _ = _mk(m, k, n, jnp.float32, 0.0, key=19)   # fully dense
+    bmap = jnp.ones((4, 4), jnp.int32)                 # 16 live tiles
+    got = ops.masked_matmul(a, b, out_mask=bmap, block=(8, 8, 8),
+                            compact=True, max_active_blocks=3)  # cap 3 < 16
+    np.testing.assert_allclose(got, a @ b, rtol=1e-5, atol=1e-5)
+    # ...and under jit (the overflow check is a traced-value cond)
+    f = jax.jit(lambda a, b: ops.masked_matmul(
+        a, b, out_mask=bmap, block=(8, 8, 8), compact=True,
+        max_active_blocks=3, interpret=True))
+    np.testing.assert_allclose(f(a, b), a @ b, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("compact", [False, True])
+def test_epilogue_mult_fused_matches_oracle(compact):
+    """The σ'-Hadamard epilogue inside the kernel == separate multiply."""
+    m, k, n = 40, 24, 48
+    a, b, mask = _mk(m, k, n, jnp.float32, 0.6, key=23)
+    om = ref.block_any_nonzero(mask, 8, 16)
+    got = ops.masked_matmul(a, b, out_mask=om, block=(8, 8, 16),
+                            compact=compact, epilogue_mult=mask)
+    want = ref.masked_matmul(a, b, out_mask=om, bm=8, bk=8, bn=16,
+                             epilogue_mult=mask)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    # epilogue zeros are exact
+    assert np.all(np.asarray(got)[np.asarray(mask) == 0] == 0.0)

@@ -1,7 +1,16 @@
-"""Property-based tests (hypothesis) for the system's invariants."""
+"""Property-based tests (hypothesis) for the system's invariants.
+
+Requires the ``dev`` extra (``pip install -e .[dev]``); skipped cleanly —
+not a collection error — where hypothesis isn't installed.  Deterministic
+sweep versions of the core invariants live in tests/test_bitmap_threading.py
+so tier-1 coverage does not depend on this file.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import sparsity
