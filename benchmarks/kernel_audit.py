@@ -101,6 +101,67 @@ def kernel_audit() -> Tuple[List[dict], str]:
 # backward results stayed exact against dense autodiff / the ref oracles.
 # ---------------------------------------------------------------------------
 
+def queue_cost_audit() -> Tuple[List[dict], str]:
+    """Queue-construction cost: argsort reference vs Pallas prefix sum.
+
+    The compact schedule's queue was built with a full argsort over the
+    flattened (Mb·Nb) tile bitmap — O(T log T) comparisons on the step's
+    critical path.  The prefix-sum builder does O(T) adds.  This audit
+    records, per bitmap size: the modeled op counts, measured wall time of
+    each construction (interpret-mode Pallas on CPU, so the *ratio* is
+    indicative, the model is the claim), and bit-identity of the emitted
+    queues against ``core.workredist.static_queue_order``.
+    """
+    import math
+    import time
+
+    from repro.core.workredist import static_queue_order
+
+    rng = np.random.default_rng(0)
+    rows: List[dict] = []
+    all_match = True
+    for mb, nb in ((8, 8), (16, 16), (32, 32), (64, 64), (128, 128)):
+        t = mb * nb
+        bm_np = (rng.random((mb, nb)) > 0.5).astype(np.int32)
+        bm = jnp.asarray(bm_np)
+        ri, rj, rn = static_queue_order(bm_np)
+
+        def _timed(builder):
+            stats.reset()
+            out = ops.build_queue(bm, capacity=t, builder=builder)
+            jax.block_until_ready(out)
+            t0 = time.perf_counter()
+            for _ in range(3):
+                out = ops.build_queue(bm, capacity=t, builder=builder)
+                jax.block_until_ready(out)
+            us = (time.perf_counter() - t0) / 3 * 1e6
+            ii, jj, nl = (np.asarray(o) for o in out)
+            match = bool(int(nl[0]) == rn and np.array_equal(ii, ri)
+                         and np.array_equal(jj, rj))
+            return us, match
+
+        us_sort, m_sort = _timed("argsort")
+        us_pfx, m_pfx = _timed("prefix_sum")
+        all_match &= m_sort and m_pfx
+        rows.append({
+            "tiles": t, "shape": f"{mb}x{nb}",
+            "argsort_ops": int(t * max(1, math.ceil(math.log2(t)))),
+            "prefix_sum_ops": t,
+            "op_ratio": round(max(1, math.ceil(math.log2(t))), 2),
+            "us_argsort": round(us_sort, 1),
+            "us_prefix_sum": round(us_pfx, 1),
+            "match_reference": m_sort and m_pfx,
+        })
+    # A builder diverging from the reference order is a correctness bug,
+    # not a data point — fail the audit (run.py exits nonzero for named
+    # tables, which is the CI gate).
+    assert all_match, "queue builders diverged from static_queue_order"
+    big = rows[-1]
+    return rows, (
+        f"op_ratio@{big['shape']}={big['op_ratio']}x "
+        f"queues_match_reference={all_match}")
+
+
 def bitmap_op_audit() -> Tuple[List[dict], str]:
     from repro.core import policy as pol
     from repro.core.sparse_conv import relu_conv

@@ -1,4 +1,6 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
+# Usage: python benchmarks/run.py [table ...] — no args runs every table;
+# naming tables (e.g. ``queue_cost_audit``) runs just those (CI artifacts).
 import csv
 import io
 import os
@@ -13,15 +15,24 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 
 def main() -> None:
     from benchmarks.figures import ALL_FIGURES
-    from benchmarks.kernel_audit import bitmap_op_audit, kernel_audit
+    from benchmarks.kernel_audit import (
+        bitmap_op_audit, kernel_audit, queue_cost_audit)
     from benchmarks.roofline import roofline_rows
 
     benches = dict(ALL_FIGURES)
     benches["kernel_audit"] = kernel_audit
     benches["bitmap_op_audit"] = bitmap_op_audit
+    benches["queue_cost_audit"] = queue_cost_audit
     benches["roofline_table"] = roofline_rows
 
+    only = sys.argv[1:]
+    if only:
+        unknown = [n for n in only if n not in benches]
+        assert not unknown, f"unknown tables {unknown}; have {sorted(benches)}"
+        benches = {n: benches[n] for n in only}
+
     os.makedirs(RESULTS_DIR, exist_ok=True)
+    failed = []
     print("name,us_per_call,derived")
     for name, fn in benches.items():
         t0 = time.time()
@@ -29,6 +40,7 @@ def main() -> None:
             rows, derived = fn()
         except Exception as e:  # keep the harness running
             print(f"{name},ERROR,{e!r}")
+            failed.append(name)
             continue
         us = (time.time() - t0) * 1e6
         # persist full rows per table
@@ -39,6 +51,11 @@ def main() -> None:
                 w.writeheader()
                 w.writerows(rows)
         print(f"{name},{us:.0f},{derived}")
+    # Explicitly-named tables are CI gates: an error must fail the job
+    # (the full sweep stays best-effort so one bad table can't hide the
+    # others' rows).
+    if only and failed:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -25,12 +25,20 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=5)
     ap.add_argument("--image-size", type=int, default=16)
     ap.add_argument("--width", type=float, default=0.25)
+    ap.add_argument("--kernel-impl", default="xla_ref",
+                    choices=["xla_ref", "pallas"])
+    ap.add_argument("--queue-builder", default="prefix_sum",
+                    choices=["prefix_sum", "argsort"],
+                    help="compact-queue construction on the pallas impl: "
+                         "on-device prefix-sum compaction (default) or the "
+                         "argsort reference")
     args = ap.parse_args()
 
     model = build_cnn(args.net, image_size=args.image_size, width=args.width,
                       num_classes=100)
     params = model.init(jax.random.key(0))
-    policy = IN_OUT_WR.with_(kernel_impl="xla_ref")
+    policy = IN_OUT_WR.with_(kernel_impl=args.kernel_impl,
+                             queue_builder=args.queue_builder)
 
     @jax.jit
     def step(params, img, labels):

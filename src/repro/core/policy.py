@@ -24,6 +24,12 @@ class SparsityPolicy:
     use_input_sparsity_bp: bool = False   # BP: skip zero gradient operands
     use_output_sparsity: bool = False     # BP: skip outputs the ReLU mask kills
     work_redistribution: bool = False     # compacted work-queue schedule
+    queue_builder: Literal["prefix_sum", "argsort"] = "prefix_sum"
+                                          # how the compact queue is built:
+                                          # on-device Pallas prefix-sum
+                                          # compaction (O(T), default) or the
+                                          # retained argsort reference
+                                          # (O(T log T), host-side sort)
     block: Tuple[int, int, int] = (128, 128, 128)
     kernel_impl: Literal["pallas", "xla_ref"] = "xla_ref"
     interpret: Optional[bool] = None      # None → auto (CPU backend ⇒ True)

@@ -67,13 +67,15 @@ def _mm(a, b, out_mask, a_mask, b_mask, policy: SparsityPolicy, out_dtype,
             out = kops.masked_matmul(
                 a, b, out_mask=out_mask, a_mask=a_mask, b_mask=b_mask,
                 block=policy.block, out_dtype=jnp.float32,
-                compact=policy.work_redistribution, interpret=policy.interpret,
+                compact=policy.work_redistribution,
+                queue_builder=policy.queue_builder, interpret=policy.interpret,
             )
             return (out * epilogue.astype(jnp.float32)).astype(out_dtype)
         return kops.masked_matmul(
             a, b, out_mask=out_mask, a_mask=a_mask, b_mask=b_mask,
             block=policy.block, out_dtype=out_dtype,
             compact=policy.work_redistribution,
+            queue_builder=policy.queue_builder,
             epilogue_mult=epilogue, interpret=policy.interpret,
         )
     # xla_ref: numerically-equivalent dense compute + masking.  The skipped

@@ -14,7 +14,12 @@ tile latency; ~70% → ~83% utilization) and the WR bars of Figs. 11–15.
 On the TPU port the same policy is realized *statically* by the compacted
 work-queue kernel (kernels/masked_matmul.compact_masked_matmul_kernel);
 this module is the dynamic-hardware reference the static schedule is
-compared against.
+compared against.  ``static_queue_order`` below is the executable contract
+for the ORDER of that static queue — both queue builders in
+``kernels.ops.build_queue`` (the Pallas prefix-sum compaction and the
+argsort reference) are property-tested against it; the full queue
+lifecycle (bitmap → prefix sum → queue → scatter-back, overflow
+semantics) is documented in docs/bitmap_lifecycle.md.
 """
 from __future__ import annotations
 
@@ -88,6 +93,51 @@ def simulate(
         utilization=util,
         n_redistributions=n_redist,
     )
+
+
+def wdu_dispatch_order(bitmap: np.ndarray) -> list:
+    """The WDU's tile-dispatch rule, executed literally (paper §4.6): among
+    the remaining active tiles, repeatedly pick the one with the
+    lexicographically smallest state tuple — i.e. smallest (i, j).  O(T²)
+    by construction; exists only to pin ``static_queue_order`` (and through
+    it both kernel queue builders) to the paper's rule, not to be fast."""
+    remaining = {(int(i), int(j))
+                 for i, j in zip(*np.nonzero(np.asarray(bitmap) != 0))}
+    order = []
+    while remaining:
+        nxt = min(remaining)               # lexicographic on the (i, j) tuple
+        order.append(nxt)
+        remaining.remove(nxt)
+    return order
+
+
+def static_queue_order(
+    bitmap: np.ndarray,
+    capacity: int = 0,
+) -> Tuple[np.ndarray, np.ndarray, int]:
+    """REFERENCE order of the static work queue: ``(ii, jj, n_live)``.
+
+    Row-major coordinates of the set bits of a (Mb, Nb) tile bitmap — which
+    is exactly the WDU dispatch order (``wdu_dispatch_order``), since
+    row-major (i, j) IS ascending lexicographic on the state tuple.  Both
+    the Pallas prefix-sum builder and the argsort reference in
+    ``kernels.ops.build_queue`` must emit this order bit-for-bit
+    (tests/test_queue_builder.py).
+
+    ``capacity`` > 0 pads/truncates ``ii``/``jj`` to that many slots (dead
+    slots are zero — valid coords for the consumer's gathers); ``n_live``
+    is always the true set-bit count, so callers can detect overflow.
+    """
+    bm = np.asarray(bitmap) != 0
+    ri, rj = np.nonzero(bm)                # C order == row-major == WDU order
+    n_live = int(ri.size)
+    cap = capacity if capacity > 0 else bm.size
+    ii = np.zeros(cap, np.int32)
+    jj = np.zeros(cap, np.int32)
+    k = min(n_live, cap)
+    ii[:k] = ri[:k]
+    jj[:k] = rj[:k]
+    return ii, jj, n_live
 
 
 def tile_work_from_mask(

@@ -3,8 +3,9 @@
 Layout (per kernel): <name>.py — pl.pallas_call + BlockSpec tiling;
 ops.py — jit'd public wrappers; ref.py — pure-jnp oracles.
 """
-from . import ops, ref, stats  # noqa: F401
+from . import ops, queue_builder, ref, stats  # noqa: F401
 from .ops import (  # noqa: F401
+    build_queue,
     masked_matmul,
     relu_bwd_masked,
     relu_encode,

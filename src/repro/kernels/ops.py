@@ -19,10 +19,75 @@ import jax.numpy as jnp
 
 from . import ref, stats
 from .masked_matmul import compact_masked_matmul_kernel, masked_matmul_kernel
+from .queue_builder import build_queue_kernel
 from .relu_encode import relu_encode_kernel
 
 # MXU-native tile. Tests sweep smaller tiles in interpret mode.
 DEFAULT_BLOCK = (128, 128, 128)
+
+def _parse_version(v: str):
+    """Leading-digit parse per component: '0.4.27rc1' → (0, 4, 27); any
+    unparseable component compares as 0 (never an import-time crash)."""
+    import re
+    out = []
+    for part in v.split(".")[:3]:
+        m = re.match(r"\d+", part)
+        out.append(int(m.group()) if m else 0)
+    return tuple(out)
+
+
+_JAX_VERSION = _parse_version(jax.__version__)
+
+
+def _stable_argsort_desc(flat: jnp.ndarray) -> jnp.ndarray:
+    """Stable descending argsort of a {0,1} vector (active indices first,
+    row-major within each class) — the retained O(T log T) queue-builder
+    reference.  ``stable=`` only exists from jax 0.4.27; earlier releases
+    sort stably by default, so the kwarg is version-gated, not assumed."""
+    if _JAX_VERSION >= (0, 4, 27):
+        return jnp.argsort(-flat, stable=True)
+    return jnp.argsort(-flat)  # pre-0.4.27 argsort is stable by default
+
+
+def build_queue(
+    bitmap: jnp.ndarray,
+    *,
+    capacity: int,
+    builder: str = "prefix_sum",
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Active-tile queue ``(ii, jj, n_live)`` from a (Mb, Nb) tile bitmap.
+
+    Queue order is the WDU's "lexicographically smallest state tuple first"
+    — row-major (i, j); ``core.workredist.static_queue_order`` is the
+    reference.  ``n_live`` (1,) is the TRUE set-bit count (may exceed
+    ``capacity``; slots past it are zero-padded).
+
+    builder="prefix_sum" (default): Pallas blockwise exclusive-prefix-sum
+    stream compaction — O(T), no sort on the critical path.
+    builder="argsort": the seed's O(T log T) sort, kept as the reference
+    and fallback.  Each construction is counted by ``stats`` as
+    ``queue:<builder>``.
+    """
+    mb, nb = bitmap.shape
+    stats.record(f"queue:{builder}")
+    if builder == "argsort":
+        flat = bitmap.reshape(-1)
+        order = _stable_argsort_desc(flat)[:capacity]
+        if order.shape[0] < capacity:           # capacity may exceed T
+            order = jnp.pad(order, (0, capacity - order.shape[0]))
+        ii = (order // nb).astype(jnp.int32)
+        jj = (order % nb).astype(jnp.int32)
+        # Dead slots must carry valid (in-range) coords for the consumer's
+        # gathers; zero them like the prefix-sum builder does.
+        live = jnp.arange(capacity) < flat.sum()
+        ii = jnp.where(live, ii, 0)
+        jj = jnp.where(live, jj, 0)
+        return ii, jj, flat.sum().reshape(1)
+    if builder != "prefix_sum":
+        raise ValueError(f"unknown queue builder: {builder!r}")
+    return build_queue_kernel(bitmap, capacity=capacity,
+                              interpret=_use_interpret(interpret))
 
 
 def _use_interpret(interpret: Optional[bool]) -> bool:
@@ -61,6 +126,7 @@ def masked_matmul(
     out_dtype=jnp.float32,
     compact: bool = False,
     max_active_blocks: Optional[int] = None,
+    queue_builder: str = "prefix_sum",
     epilogue_mult: Optional[jnp.ndarray] = None,
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
@@ -73,7 +139,9 @@ def masked_matmul(
     grid walks only active output tiles (queue capacity
     ``max_active_blocks``, default = all tiles).  If more tiles are live
     than the queue holds, the call falls back to the predicated schedule —
-    never a silent truncation.
+    never a silent truncation.  ``queue_builder`` selects how the queue is
+    constructed: ``"prefix_sum"`` (default) is the on-device Pallas stream
+    compaction, ``"argsort"`` the retained sort-based reference.
 
     ``epilogue_mult`` (M, N): fused Hadamard applied to the output inside
     the kernel (the backward σ′ multiply), saving a full-size VPU pass.
@@ -116,15 +184,13 @@ def masked_matmul(
 
     if compact:
         s_cap = max_active_blocks if max_active_blocks is not None else ni * nj
-        # Active-queue construction: stable-order the coordinates of set
-        # bits to the front (the WDU's "lexicographically smallest state
-        # tuple first" order is row-major (i, j) — identical here).
-        flat = om.reshape(-1)
-        n_live = flat.sum()
-        order = jnp.argsort(-flat, stable=True)  # active tiles first
-        order = order[:s_cap]
-        ii = (order // nj).astype(jnp.int32)
-        jj = (order % nj).astype(jnp.int32)
+        # Active-queue construction in the WDU's "lexicographically smallest
+        # state tuple first" order — row-major (i, j).  The default builder
+        # is the O(T) Pallas prefix-sum compaction; "argsort" keeps the
+        # seed's O(T log T) sort as a reference/fallback.
+        ii, jj, n_live_v = build_queue(
+            om, capacity=s_cap, builder=queue_builder, interpret=itp)
+        n_live = n_live_v[0]
         n_active = jnp.minimum(n_live, s_cap).reshape(1)
 
         def _compact():
@@ -193,6 +259,7 @@ def relu_bwd_masked(
     use_input_sparsity: bool = True,
     use_output_sparsity: bool = True,
     compact: bool = False,
+    queue_builder: str = "prefix_sum",
     out_dtype=jnp.float32,
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
@@ -219,6 +286,7 @@ def relu_bwd_masked(
     return masked_matmul(
         dy, w_t, out_mask=out_mask, a_mask=a_mask, b_mask=None,
         block=block, out_dtype=out_dtype, compact=compact,
+        queue_builder=queue_builder,
         epilogue_mult=relu_mask.astype(jnp.float32), interpret=interpret,
     )
 

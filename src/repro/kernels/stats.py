@@ -24,8 +24,11 @@ _COUNTS: "collections.Counter[str]" = collections.Counter()
 
 def record(kind: str) -> None:
     """Register one bitmap *computation*.  ``kind`` is ``<how>:<what>``:
-    how ∈ {encode, scan} (fused-kernel vs standalone dense scan),
-    what ∈ {act, grad} (activation-derived vs incoming-gradient data)."""
+    how ∈ {encode, scan, queue} (fused-kernel vs standalone dense scan vs
+    work-queue construction),
+    what ∈ {act, grad} for encode/scan; for queue it is the builder backend
+    ∈ {prefix_sum, argsort} — so ``total("argsort")`` audits that the
+    default compact path never sorts (the PR-2 contract)."""
     _COUNTS[kind] += 1
 
 
@@ -41,6 +44,15 @@ def total(what: str = "") -> int:
     """Total computations, optionally filtered by the ``:<what>`` suffix."""
     return sum(v for k, v in _COUNTS.items()
                if not what or k.endswith(":" + what))
+
+
+def queue_builds(builder: str = "") -> int:
+    """Work-queue constructions, optionally for one builder backend.
+    ``queue_builds("argsort") == 0`` is the no-sort-on-the-critical-path
+    assertion for the default compact schedule."""
+    return sum(v for k, v in _COUNTS.items()
+               if k.startswith("queue:")
+               and (not builder or k == "queue:" + builder))
 
 
 @contextlib.contextmanager

@@ -109,9 +109,11 @@ def test_coarsen_bitmap_is_exact_or_reduce():
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("policy", [
-    PALLAS,
-    PALLAS_U,
+    PALLAS,                                  # compact × fused σ′ epilogue
+    PALLAS_U,                                # predicated × fused epilogue
     PALLAS_U.with_(fuse_epilogue=False),     # ablation: separate VPU pass
+    PALLAS.with_(fuse_epilogue=False),       # compact × separate VPU pass
+    PALLAS.with_(queue_builder="argsort"),   # compact × fused, sort-built q
     pol.IN_OUT,                              # xla_ref threading path
 ])
 def test_act_matmul_grads_exact_after_threading(policy):
@@ -134,7 +136,8 @@ def test_act_matmul_grads_exact_after_threading(policy):
 @pytest.mark.parametrize("stride,padding", [(1, "SAME"), (2, "SAME"),
                                             (1, "VALID"), (2, "VALID")])
 @pytest.mark.parametrize("policy", [PALLAS, PALLAS_U,
-                                    PALLAS_U.with_(fuse_epilogue=False)])
+                                    PALLAS_U.with_(fuse_epilogue=False),
+                                    PALLAS.with_(fuse_epilogue=False)])
 def test_relu_conv_grads_exact_after_threading(stride, padding, policy):
     x = _rand((2, 9, 11, 5), 13, 0.0)     # continuous pre-activation
     w = _rand((3, 3, 5, 7), 14, 0.0)
@@ -150,6 +153,28 @@ def test_relu_conv_grads_exact_after_threading(stride, padding, policy):
     ga, gb = jax.grad(f, (0, 1))(x, w), jax.grad(g, (0, 1))(x, w)
     for a, b in zip(ga, gb):
         np.testing.assert_allclose(a, b, rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("queue_builder", ["prefix_sum", "argsort"])
+def test_compact_epilogue_bounded_queue_grads_exact(queue_builder):
+    """The compact×epilogue cell with a REAL queue bound: the fused σ′
+    writeback must stay exact when the schedule is the compacted queue at
+    exactly-live capacity (the WDU case) — for both queue builders."""
+    from repro.kernels import ops as kops, ref as kref
+    rng = np.random.default_rng(31)
+    dy = jnp.asarray(rng.standard_normal((40, 24)), jnp.float32)
+    w_t = jnp.asarray(rng.standard_normal((24, 48)), jnp.float32)
+    relu_mask = jnp.asarray(rng.random((40, 48)) > 0.6, jnp.float32)
+    mask_p = jnp.pad(relu_mask, ((0, 0), (0, 0)))
+    n_live = int(np.asarray(kref.block_any_nonzero(mask_p, 8, 16)).sum())
+    got = kops.masked_matmul(
+        dy, w_t, out_mask=kref.block_any_nonzero(mask_p, 8, 16),
+        block=(8, 8, 16), compact=True, max_active_blocks=n_live,
+        queue_builder=queue_builder, epilogue_mult=relu_mask)
+    want = kref.relu_bwd_masked(dy, w_t, relu_mask, bm=8, bk=8, bn=16)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    # fused-epilogue zeros are exact zeros even through the scatter-back
+    assert np.all(np.asarray(got)[np.asarray(relu_mask) == 0] == 0.0)
 
 
 @pytest.mark.parametrize("stride,padding", [(1, "SAME"), (2, "VALID")])
