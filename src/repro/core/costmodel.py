@@ -77,7 +77,14 @@ DEFAULT_HW = HwConfig()
 
 @dataclasses.dataclass(frozen=True)
 class ConvSpec:
-    """One CONV (or FC, with H=W=U=V=1, R=S=1) layer's static shape."""
+    """One CONV (or FC, with H=W=U=V=1, R=S=1) layer's static shape.
+
+    ``groups`` models grouped/depthwise convs (groups == c for depthwise):
+    every output channel contracts over a C/G·R·S receptive field and every
+    input channel receives from M/G·R·S weights, so all three phases' MAC
+    counts — and the lane-occupancy receptive field ``crs`` — shrink by G.
+    MobileNet's dw layers are thereby *modeled* rather than approximated as
+    full convs (which overcounted their work C-fold)."""
     name: str
     c: int
     h: int
@@ -86,6 +93,7 @@ class ConvSpec:
     r: int
     s: int
     stride: int = 1
+    groups: int = 1
     has_bn: bool = False          # BN between this CONV and its ReLU
     input_is_relu: bool = True    # producer of our input is a ReLU (enables
                                   # FP-IN and BP-OUT sparsity)
@@ -102,15 +110,21 @@ class ConvSpec:
 
     @property
     def crs(self) -> int:
-        return self.c * self.r * self.s
+        """Per-output receptive field: C/G·R·S (the PE lane-packing unit)."""
+        return self.c * self.r * self.s // self.groups
+
+    @property
+    def mrs(self) -> int:
+        """Per-input BP receptive field: M/G·R·S."""
+        return self.m * self.r * self.s // self.groups
 
     def macs_fp(self) -> float:
         return float(self.batch * self.m * self.u * self.v * self.crs)
 
-    def macs_bp(self) -> float:   # dX: [M,U,V] -> [C,H,W] through RSxM
-        return float(self.batch * self.c * self.h * self.w * self.m * self.r * self.s)
+    def macs_bp(self) -> float:   # dX: [M,U,V] -> [C,H,W] through RS×M/G
+        return float(self.batch * self.c * self.h * self.w * self.mrs)
 
-    def macs_wg(self) -> float:   # dW: M·C·R·S outputs × U·V·batch accum
+    def macs_wg(self) -> float:   # dW: M·(C/G)·R·S outputs × U·V·batch accum
         return float(self.batch * self.m * self.crs * self.u * self.v)
 
 
@@ -284,12 +298,12 @@ def layer_cost(
             trace.fp_active_map, hw.tx, hw.ty, spec.crs * x_d)
     if trace.bp_active_map is not None and use_out and spec.input_is_relu:
         tile_bp = workredist.tile_work_from_mask(
-            trace.bp_active_map, hw.tx, hw.ty, spec.m * spec.r * spec.s * g_d)
+            trace.bp_active_map, hw.tx, hw.ty, spec.mrs * g_d)
 
     fp = _phase_cost(spec.macs_fp(), x_d, spec.crs, fp_bytes, hw,
                      tile_work=tile_fp, work_redistribution=use_wr,
                      reconfig_mode=reconfig_mode)
-    bp = _phase_cost(spec.macs_bp(), g_d * o_d, spec.m * spec.r * spec.s,
+    bp = _phase_cost(spec.macs_bp(), g_d * o_d, spec.mrs,
                      bp_bytes, hw, tile_work=tile_bp,
                      work_redistribution=use_wr, reconfig_mode=reconfig_mode)
     wg = _phase_cost(spec.macs_wg(), x_d * g_d, spec.u * spec.v * spec.batch,

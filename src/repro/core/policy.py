@@ -31,6 +31,23 @@ class SparsityPolicy:
                                           # retained argsort reference
                                           # (O(T log T), host-side sort)
     block: Tuple[int, int, int] = (128, 128, 128)
+    grouped_block: Optional[Tuple[int, int, int]] = None
+                                          # nominal tile for the per-group
+                                          # GEMMs of grouped/depthwise convs
+                                          # (None → derive from `block`; each
+                                          # edge then shrinks to the
+                                          # granularity-rounded per-group dim
+                                          # via grouped_gemm_block, so tiny
+                                          # K = R·S·C/G axes get degenerate
+                                          # blocks that still mask instead of
+                                          # one huge block that masks nothing)
+    grouped_sparsity_min_k: int = 1       # per-group contraction length below
+                                          # which operand masks are dropped
+                                          # for grouped GEMMs (threshold knob:
+                                          # a K axis shorter than this can't
+                                          # amortize its bitmap; 1 = always
+                                          # mask — depthwise K = R·S ≥ 9
+                                          # still captures spatial zeros)
     kernel_impl: Literal["pallas", "xla_ref"] = "xla_ref"
     interpret: Optional[bool] = None      # None → auto (CPU backend ⇒ True)
     fuse_epilogue: bool = True            # BP: σ'-Hadamard inside the kernel
@@ -47,6 +64,34 @@ class SparsityPolicy:
 
     def with_(self, **kw) -> "SparsityPolicy":
         return dataclasses.replace(self, **kw)
+
+
+def _ceil_to(v: int, b: int) -> int:
+    return -(-v // b) * b
+
+
+def grouped_gemm_block(
+    policy: SparsityPolicy,
+    dims: Tuple[int, int, int],
+    grans: Tuple[int, int, int] = (1, 1, 1),
+) -> Tuple[int, int, int]:
+    """Degenerate tile selection for one per-group GEMM of a grouped conv.
+
+    ``dims`` are the per-group (M, K, N) of the GEMM; ``grans`` the bitmap
+    granularity each axis's masks require (edges must stay multiples of it
+    so derived masks coarsen exactly).  Each nominal edge shrinks to the
+    granularity-rounded dimension: a depthwise K of R·S = 9 gets a 9-ish
+    block (one K step, per-patch-row masking still live) instead of a 128
+    block that pads 14× and can never skip — the "degenerate block shapes
+    rather than silently masking nothing" rule.
+    """
+    nominal = policy.grouped_block or policy.block
+    out = []
+    for b, d, g in zip(nominal, dims, grans):
+        e = min(b, _ceil_to(d, g))
+        e = max(g, _ceil_to(e, g))    # keep a multiple of the granularity
+        out.append(e)
+    return tuple(out)
 
 
 DC = SparsityPolicy()

@@ -4,8 +4,20 @@ The paper's accelerator executes CONV as GEMM over the receptive field
 (K = C·R·S — its "synapse blocking at 1024" is K-blocking, §4.4).  We do the
 same: im2col the operand, run the block-sparse GEMM kernels, fold back.
 
-``relu_conv(x_pre, w)`` = conv2d(relu(x_pre), w), NHWC / RSCM layouts,
-with the same three skipping opportunities as core.sparse_linear:
+ONE engine, four public faces.  ``_conv_engine_fwd``/``_conv_engine_bwd``
+is a single parameterized custom-VJP pair taking ``(fused_relu, groups)``;
+every conv flavour is a thin wrapper over it:
+
+  relu_conv            fused_relu=True,  groups=1   (the paper's unit)
+  conv                 fused_relu=False, groups=1   (signed input: pool /
+                                                     input-layer boundary)
+  grouped variants     groups=G (C % G == 0, M % G == 0): per-group im2col
+                       → ONE batched masked GEMM (G, ·, ·) per stage
+  depthwise_relu_conv  groups=C — MobileNet's dw layers, full FP/BP/WG
+                       sparsity treatment instead of a dense fallback
+
+All three stages realize the same skipping opportunities as
+core.sparse_linear:
   FP  input sparsity of relu(x_pre) patches,
   BP  output sparsity from σ'(x_pre) (survives BatchNorm *after* the conv),
       + input sparsity of the incoming gradient patches,
@@ -27,9 +39,17 @@ other mask is then *derived* from it without rescanning tensor-sized data:
     im2col'd mask (dX GEMM) and its (bk, bn) re-tiling (dW GEMM) are both
     derived from that single fine bitmap.
 
-Exactness vs dense autodiff is asserted in tests for stride ∈ {1, 2} and
-padding ∈ {SAME, VALID}; threaded-vs-rescanned mask equality is property-
-tested in tests/test_bitmap_threading.py.
+Grouped convs reuse the SAME derivations: the channel granularity divides
+C//G (see ``conv_channel_granularity``), so per-group masks are pure
+reshapes of the one bitmap's columns — group g's slice of the im2col'd
+bitmap IS the bitmap of group g's im2col'd data.  Per-group GEMM tiles are
+chosen by ``policy.grouped_gemm_block``: depthwise K-dims are tiny (R·S·1),
+so edges degenerate to the granularity-rounded dims instead of padding a
+128-block that could never mask anything.
+
+Exactness vs dense autodiff is asserted in tests for stride ∈ {1, 2},
+padding ∈ {SAME, VALID} and groups ∈ {1, 2, C}; threaded-vs-rescanned mask
+equality is property-tested in tests/test_bitmap_threading.py.
 """
 from __future__ import annotations
 
@@ -40,7 +60,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops as kops
-from .policy import SparsityPolicy
+from .policy import SparsityPolicy, grouped_gemm_block
 from .sparse_linear import (
     _bitmap_padded, _mm, _needs_act_bitmap, _needs_grad_bitmap,
 )
@@ -95,6 +115,54 @@ def _dilate_hw(x: jnp.ndarray, stride: int) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# Group splitting — pure reshapes; the (tap, channel)-minor K ordering means
+# group g's columns are contiguous per tap, so one transpose regroups a full
+# patch matrix (data OR bitmap) into the (G, ·, ·) batched-GEMM layout.
+# ---------------------------------------------------------------------------
+
+def _group_patches(pm2: jnp.ndarray, taps: int, groups: int) -> jnp.ndarray:
+    """(T, taps*C') patch matrix -> (G, T, taps*C'/G), per-group K slices.
+
+    Works identically on data (C' = C) and fine bitmaps (C' = C/gc): the
+    granularity divides C//G, so cells nest inside groups."""
+    t, k = pm2.shape
+    cg = k // taps // groups
+    return pm2.reshape(t, taps, groups, cg).transpose(2, 0, 1, 3) \
+        .reshape(groups, t, taps * cg)
+
+
+def _group_cols(x2: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """(T, C') channel-minor matrix -> (G, T, C'/G)."""
+    t, c = x2.shape
+    return x2.reshape(t, groups, c // groups).transpose(1, 0, 2)
+
+
+def _ungroup_cols(x3: jnp.ndarray) -> jnp.ndarray:
+    """(G, T, C/G) -> (T, C), inverse of ``_group_cols``."""
+    g, t, cg = x3.shape
+    return x3.transpose(1, 0, 2).reshape(t, g * cg)
+
+
+def _group_weights(w: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """(R, S, C//G, M) grouped-HWIO weights -> (G, R·S·C//G, M//G).
+
+    Follows lax.conv_general_dilated's feature_group_count convention:
+    output block g (channels [g·M/G, (g+1)·M/G)) reads input group g."""
+    r, s, cg, m = w.shape
+    mg = m // groups
+    return w.reshape(r * s * cg, groups, mg).transpose(1, 0, 2)
+
+
+def _group_weights_bwd(w: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """Per-group dX weights: (R, S, C//G, M) -> (G, R·S·M//G, C//G),
+    spatially flipped and (r, s, m, c)-ordered to match gradient patches."""
+    r, s, cg, m = w.shape
+    mg = m // groups
+    wf = jnp.flip(w, axis=(0, 1)).reshape(r, s, cg, groups, mg)
+    return wf.transpose(3, 0, 1, 4, 2).reshape(groups, r * s * mg, cg)
+
+
+# ---------------------------------------------------------------------------
 # Bitmap derivation (no tensor-sized scans past this line)
 # ---------------------------------------------------------------------------
 
@@ -129,119 +197,228 @@ def _encode_conv_act(x_pre: jnp.ndarray, policy: SparsityPolicy,
     return x, SparseTensor(x_pre, fb, (1, gc))
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
-def relu_conv(x_pre: jnp.ndarray, w: jnp.ndarray, stride: int, padding: str,
-              policy: SparsityPolicy):
-    """y = conv2d(relu(x_pre), w). x_pre: (N,H,W,C); w: (R,S,C,M)."""
-    y, _ = _relu_conv_fwd(x_pre, w, stride, padding, policy)
+def _grad_sparse_tensor(dy32: jnp.ndarray, policy: SparsityPolicy,
+                        m: int, groups: int = 1) -> SparseTensor:
+    """Fine bitmap of the incoming gradient — the step's single dy scan
+    (TPU-native ``kernels.bitmap_scan`` on the pallas path)."""
+    if not _needs_grad_bitmap(policy):
+        return SparseTensor(dy32, None, None)
+    n, u, v, _ = dy32.shape
+    gc = conv_channel_granularity(m, policy.block, groups)
+    fb = scan_bitmap(dy32.reshape(n * u * v, m), (1, gc), kind="grad",
+                     impl=policy.kernel_impl, interpret=policy.interpret)
+    return SparseTensor(dy32, fb, (1, gc))
+
+
+# ---------------------------------------------------------------------------
+# The engine — one forward/backward pair for every conv flavour
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
+def _conv_engine(x: jnp.ndarray, w: jnp.ndarray, stride: int, padding: str,
+                 policy: SparsityPolicy, fused_relu: bool, groups: int):
+    """y = conv2d(relu(x) if fused_relu else x, w, groups).
+
+    x: (N,H,W,C); w: (R,S,C//G,M) — lax grouped-HWIO layout."""
+    y, _ = _conv_engine_fwd(x, w, stride, padding, policy, fused_relu, groups)
     return y
 
 
-def _relu_conv_fwd(x_pre, w, stride, padding, policy: SparsityPolicy):
-    n, h, wd, c = x_pre.shape
-    r, s, _, m = w.shape
-    bm, bk, bn = policy.block
+def _conv_engine_fwd(x_in, w, stride, padding, policy: SparsityPolicy,
+                     fused_relu: bool, groups: int):
+    n, h, wd, c = x_in.shape
+    r, s, cg_w, m = w.shape
+    assert c % groups == 0 and m % groups == 0 and cg_w == c // groups, \
+        (x_in.shape, w.shape, groups)
     plh = _pad_amounts(h, r, stride, padding)
     plw = _pad_amounts(wd, s, stride, padding)
     pad4 = (plh[0], plh[1], plw[0], plw[1])
 
-    if _needs_act_bitmap(policy):
-        gc = conv_channel_granularity(c, policy.block)
-        x, st = _encode_conv_act(x_pre, policy, gc)
+    # --- activation + its once-computed bitmap ---
+    if fused_relu:
+        if _needs_act_bitmap(policy):
+            gc = conv_channel_granularity(c, policy.block, groups)
+            x, st = _encode_conv_act(x_in, policy, gc)
+        else:
+            x = jnp.maximum(x_in, jnp.zeros((), x_in.dtype))
+            st = SparseTensor(x_in, None, None)
     else:
-        x = jnp.maximum(x_pre, jnp.zeros((), x_pre.dtype))
-        st = SparseTensor(x_pre, None, None)
+        # Signed input (pool / input-layer boundary): no fused encode —
+        # one counted scan, TPU-native on the pallas path.
+        x = x_in
+        st = SparseTensor(x, None, None)
+        if policy.kernel_impl == "pallas" and (
+                policy.use_input_sparsity_fp or policy.use_input_sparsity_bp):
+            gc = conv_channel_granularity(c, policy.block, groups)
+            st = SparseTensor(
+                x,
+                scan_bitmap(x.reshape(n * h * wd, c), (1, gc), kind="act",
+                            impl=policy.kernel_impl,
+                            interpret=policy.interpret),
+                (1, gc))
 
+    # --- FP GEMM: patches @ weights ---
     patches = _im2col(x, r, s, stride, pad4)
     u, v = patches.shape[1], patches.shape[2]
-    pm = patches.reshape(n * u * v, r * s * c)
-    wm = w.reshape(r * s * c, m)
-    a_mask = None
-    if policy.use_input_sparsity_fp and policy.kernel_impl == "pallas":
-        a_mask = _patch_bitmap(st, (n, h, wd, c), r, s, stride, pad4) \
-            .mask_for((bm, bk))
-    y = _mm(pm, wm, None, a_mask, None, policy, x_pre.dtype)
+    t = n * u * v
+    pm = patches.reshape(t, r * s * c)
+    want_a_mask = (policy.use_input_sparsity_fp
+                   and policy.kernel_impl == "pallas"
+                   and st.bitmap is not None)
+    if groups == 1:
+        a_mask = None
+        if want_a_mask:
+            bm, bk, bn = policy.block
+            a_mask = _patch_bitmap(st, (n, h, wd, c), r, s, stride, pad4) \
+                .mask_for((bm, bk))
+        y = _mm(pm, w.reshape(r * s * c, m), None, a_mask, None, policy,
+                x_in.dtype)
+    else:
+        cg, mg = c // groups, m // groups
+        gc = st.gran[1] if st.gran else 1
+        blk = grouped_gemm_block(policy, (t, r * s * cg, mg), (1, gc, 1))
+        a_mask = None
+        if want_a_mask and r * s * cg >= policy.grouped_sparsity_min_k:
+            pb = _patch_bitmap(st, (n, h, wd, c), r, s, stride, pad4)
+            pbg = _group_patches(pb.bitmap, r * s, groups)
+            a_mask = coarsen_bitmap(pbg, (1, gc), (blk[0], blk[1]))
+        yg = _mm(_group_patches(pm, r * s, groups), _group_weights(w, groups),
+                 None, a_mask, None, policy, x_in.dtype, block=blk)
+        y = _ungroup_cols(yg)
     return y.reshape(n, u, v, m), (st, w)
 
 
-def _grad_sparse_tensor(dy32: jnp.ndarray, policy: SparsityPolicy,
-                        m: int) -> SparseTensor:
-    """Fine bitmap of the incoming gradient — the step's single dy scan."""
-    if not _needs_grad_bitmap(policy):
-        return SparseTensor(dy32, None, None)
-    n, u, v, _ = dy32.shape
-    gc = conv_channel_granularity(m, policy.block)
-    fb = scan_bitmap(dy32.reshape(n * u * v, m), (1, gc), kind="grad")
-    return SparseTensor(dy32, fb, (1, gc))
-
-
-def _relu_conv_bwd(stride, padding, policy: SparsityPolicy, res, dy):
+def _conv_engine_bwd(stride, padding, policy: SparsityPolicy,
+                     fused_relu: bool, groups: int, res, dy):
     st, w = res
-    x_pre = st.data
-    n, h, wd, c = x_pre.shape
+    n, h, wd, c = st.data.shape
     r, s, _, m = w.shape
     u, v = dy.shape[1], dy.shape[2]
-    mask = (x_pre > 0)
-    x = jnp.where(mask, x_pre, jnp.zeros((), x_pre.dtype))
     bm, bk, bn = policy.block
+    if fused_relu:
+        x_pre = st.data
+        relu_mask = (x_pre > 0)
+        x = jnp.where(relu_mask, x_pre, jnp.zeros((), x_pre.dtype))
+        out_dtype = x_pre.dtype
+    else:
+        x = st.data
+        relu_mask = None
+        out_dtype = x.dtype
     dy32 = dy.astype(jnp.float32)
-    st_dy = _grad_sparse_tensor(dy32, policy, m)
+    st_dy = _grad_sparse_tensor(dy32, policy, m, groups)
+    t = n * u * v
+    cg, mg = c // groups, m // groups
+    gc = st.gran[1] if st.gran else 1
+    gcg = st_dy.gran[1] if st_dy.gran else 1
 
-    # ---- dx_pre: full-correlation of dilated dy with flipped w, fused with
-    # the σ' Hadamard → OUTPUT sparsity on the (N·H·W, C) GEMM. ----
+    # ---- dX: full-correlation of dilated dy with flipped w; for the fused
+    # unit the σ' Hadamard rides the kernel epilogue → OUTPUT sparsity on
+    # the (N·H·W, C) GEMM. ----
     plh = _pad_amounts(h, r, stride, padding)
     plw = _pad_amounts(wd, s, stride, padding)
     dyd = _dilate_hw(dy32, stride)
     hd, wdd = dyd.shape[1], dyd.shape[2]
     # output spatial size must equal (h, wd):  pad_lo = r-1-fwd_pad_lo
     pg_h_lo = r - 1 - plh[0]
-    pg_h_hi = h - (hd + pg_h_lo - r + 1) + 0  # solve for hi
+    pg_h_hi = h - (hd + pg_h_lo - r + 1)
     pg_w_lo = s - 1 - plw[0]
     pg_w_hi = wd - (wdd + pg_w_lo - s + 1)
     gpad4 = (pg_h_lo, pg_h_hi, pg_w_lo, pg_w_hi)
     gpatches = _im2col(dyd, r, s, 1, gpad4)
-    gm = gpatches.reshape(n * h * wd, r * s * m)
-    # w flipped spatially, (r, s, m, c) ordering to match patch layout
-    wt = jnp.flip(w, axis=(0, 1)).transpose(0, 1, 3, 2).reshape(r * s * m, c)
-    mask2d = mask.reshape(n * h * wd, c).astype(jnp.float32)
+    gm2 = gpatches.reshape(n * h * wd, r * s * m)
     # out_mask: the forward ReLU bitmap, re-tiled (footprint(σ') ==
-    # footprint(relu) — paper §3.2).  Zero recompute.
-    out_mask = st.mask_for((bm, bn)) if policy.use_output_sparsity else None
-    g_mask = None
+    # footprint(relu) — paper §3.2).  Zero recompute.  Plain convs have no
+    # σ' ⇒ no output sparsity (Fig. 11 discussion).
+    use_out = fused_relu and policy.use_output_sparsity \
+        and st.bitmap is not None
+    # gradient-patch mask: the dy bitmap dilated and im2col'd in bitmap
+    # space — mirrors exactly what the data underwent.
+    gpb2 = None
     if st_dy.bitmap is not None:
-        # The gradient-patch mask is the dy bitmap dilated and im2col'd in
-        # bitmap space — mirrors exactly what the data underwent.
-        gcg = st_dy.gran[1]
         gfb4 = st_dy.bitmap.reshape(n, u, v, m // gcg)
         gpb = _im2col(_dilate_hw(gfb4, stride), r, s, 1, gpad4)
-        g_mask = coarsen_bitmap(gpb.reshape(n * h * wd, -1), (1, gcg),
-                                (bm, bk))
-    dx = _mm(gm, wt.astype(jnp.float32), out_mask, g_mask, None, policy,
-             x_pre.dtype, epilogue=mask2d)
-    dx_pre = dx.reshape(n, h, wd, c)
+        gpb2 = gpb.reshape(n * h * wd, -1)
+    mask2d = relu_mask.reshape(n * h * wd, c).astype(jnp.float32) \
+        if fused_relu else None
+
+    if groups == 1:
+        wt = jnp.flip(w, axis=(0, 1)).transpose(0, 1, 3, 2) \
+            .reshape(r * s * m, c)
+        out_mask = st.mask_for((bm, bn)) if use_out else None
+        g_mask = None
+        if gpb2 is not None:
+            g_mask = coarsen_bitmap(gpb2, (1, gcg), (bm, bk))
+        dx = _mm(gm2, wt.astype(jnp.float32), out_mask, g_mask, None, policy,
+                 out_dtype, epilogue=mask2d)
+        dx = dx.reshape(n, h, wd, c)
+    else:
+        blk = grouped_gemm_block(policy, (n * h * wd, r * s * mg, cg),
+                                 (1, gcg, gc))
+        out_mask = None
+        if use_out:
+            out_mask = coarsen_bitmap(_group_cols(st.bitmap, groups),
+                                      (1, gc), (blk[0], blk[2]))
+        g_mask = None
+        if gpb2 is not None and r * s * mg >= policy.grouped_sparsity_min_k:
+            g_mask = coarsen_bitmap(_group_patches(gpb2, r * s, groups),
+                                    (1, gcg), (blk[0], blk[1]))
+        epi = _group_cols(mask2d, groups) if mask2d is not None else None
+        dxg = _mm(_group_patches(gm2, r * s, groups),
+                  _group_weights_bwd(w, groups).astype(jnp.float32),
+                  out_mask, g_mask, None, policy, out_dtype,
+                  epilogue=epi, block=blk)
+        dx = _ungroup_cols(dxg).reshape(n, h, wd, c)
 
     # ---- dW = patches(x)ᵀ @ dy — WG stage, input sparsity both sides ----
     pad4 = (plh[0], plh[1], plw[0], plw[1])
     patches = _im2col(x, r, s, stride, pad4)
-    pm = patches.reshape(n * u * v, r * s * c).astype(jnp.float32)
-    dym = dy32.reshape(n * u * v, m)
-    pt = pm.T
-    pt_mask = None
-    if _needs_grad_bitmap(policy) and st.bitmap is not None:
-        # Xᵀ patch mask: forward bitmap -> patch bitmap -> block transpose.
-        pt_mask = _patch_bitmap(st, (n, h, wd, c), r, s, stride, pad4) \
-            .t_mask_for((bm, bk))
-    dym_mask = st_dy.mask_for((bk, bn))
-    dw = _mm(pt, dym, None, pt_mask, dym_mask, policy, jnp.float32)
-    return dx_pre, dw.reshape(r, s, c, m).astype(w.dtype)
+    pm = patches.reshape(t, r * s * c).astype(jnp.float32)
+    dym = dy32.reshape(t, m)
+    want_pt_mask = _needs_grad_bitmap(policy) and st.bitmap is not None
+    if groups == 1:
+        pt_mask = None
+        if want_pt_mask:
+            # Xᵀ patch mask: forward bitmap -> patch bitmap -> block transp.
+            pt_mask = _patch_bitmap(st, (n, h, wd, c), r, s, stride, pad4) \
+                .t_mask_for((bm, bk))
+        dym_mask = st_dy.mask_for((bk, bn))
+        dw = _mm(pm.T, dym, None, pt_mask, dym_mask, policy, jnp.float32)
+        dw = dw.reshape(r, s, c, m)
+    else:
+        blk = grouped_gemm_block(policy, (r * s * cg, t, mg), (gc, 1, gcg))
+        pt_mask = None
+        if want_pt_mask:
+            pb = _patch_bitmap(st, (n, h, wd, c), r, s, stride, pad4)
+            pbg = _group_patches(pb.bitmap, r * s, groups)
+            pt_mask = coarsen_bitmap(pbg.transpose(0, 2, 1), (gc, 1),
+                                     (blk[0], blk[1]))
+        dym_mask = None
+        if st_dy.bitmap is not None:
+            dym_mask = coarsen_bitmap(_group_cols(st_dy.bitmap, groups),
+                                      (1, gcg), (blk[1], blk[2]))
+        dwg = _mm(_group_patches(pm, r * s, groups).transpose(0, 2, 1),
+                  _group_cols(dym, groups), None, pt_mask, dym_mask, policy,
+                  jnp.float32, block=blk)
+        # (G, R·S·C//G, M//G) -> (R, S, C//G, M) group-major output channels
+        dw = dwg.transpose(1, 0, 2).reshape(r, s, cg, m)
+    return dx, dw.astype(w.dtype)
 
 
-relu_conv.defvjp(_relu_conv_fwd, _relu_conv_bwd)
+_conv_engine.defvjp(_conv_engine_fwd, _conv_engine_bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+# ---------------------------------------------------------------------------
+# Public wrappers — thin faces over the one engine
+# ---------------------------------------------------------------------------
+
+def relu_conv(x_pre: jnp.ndarray, w: jnp.ndarray, stride: int, padding: str,
+              policy: SparsityPolicy, groups: int = 1):
+    """y = conv2d(relu(x_pre), w). x_pre: (N,H,W,C); w: (R,S,C//G,M)."""
+    return _conv_engine(x_pre, w, stride, padding, policy, True, groups)
+
+
 def conv(x: jnp.ndarray, w: jnp.ndarray, stride: int, padding: str,
-         policy: SparsityPolicy):
+         policy: SparsityPolicy, groups: int = 1):
     """Plain conv2d (no fused ReLU): FP/BP input sparsity only.
 
     Used at MaxPool→CONV and input-layer boundaries where the paper notes
@@ -250,81 +427,28 @@ def conv(x: jnp.ndarray, w: jnp.ndarray, stride: int, padding: str,
     signed, so the fused ReLU encode does not apply) and threaded to the
     forward operand mask and the WG transposed mask.
     """
-    y, _ = _conv_fwd(x, w, stride, padding, policy)
-    return y
+    return _conv_engine(x, w, stride, padding, policy, False, groups)
 
 
-def _conv_fwd(x, w, stride, padding, policy):
-    n, h, wd, c = x.shape
-    r, s, _, m = w.shape
-    bm, bk, bn = policy.block
-    plh = _pad_amounts(h, r, stride, padding)
-    plw = _pad_amounts(wd, s, stride, padding)
-    pad4 = (plh[0], plh[1], plw[0], plw[1])
-    st = SparseTensor(x, None, None)
-    if policy.kernel_impl == "pallas" and (
-            policy.use_input_sparsity_fp or policy.use_input_sparsity_bp):
-        gc = conv_channel_granularity(c, policy.block)
-        st = SparseTensor(
-            x, scan_bitmap(x.reshape(n * h * wd, c), (1, gc), kind="act"),
-            (1, gc))
-    patches = _im2col(x, r, s, stride, pad4)
-    u, v = patches.shape[1], patches.shape[2]
-    pm = patches.reshape(n * u * v, r * s * c)
-    a_mask = None
-    if policy.use_input_sparsity_fp and policy.kernel_impl == "pallas" \
-            and st.bitmap is not None:
-        a_mask = _patch_bitmap(st, (n, h, wd, c), r, s, stride, pad4) \
-            .mask_for((bm, bk))
-    y = _mm(pm, w.reshape(r * s * c, m), None, a_mask, None, policy, x.dtype)
-    return y.reshape(n, u, v, m), (st, w)
+def depthwise_relu_conv(x_pre: jnp.ndarray, w: jnp.ndarray, stride: int,
+                        padding: str, policy: SparsityPolicy):
+    """Depthwise conv over relu(x_pre): groups == C, w: (R,S,1,C·mult).
+
+    MobileNet's dw layers — each channel is its own group, so the engine
+    runs C tiny masked GEMMs as one batched launch with degenerate block
+    shapes (K = R·S), and the producer's fused-encode bitmap drives all
+    three stages exactly as for the dense convs."""
+    return _conv_engine(x_pre, w, stride, padding, policy, True,
+                        x_pre.shape[-1])
 
 
-def _conv_bwd(stride, padding, policy, res, dy):
-    st, w = res
-    x = st.data
-    # Identical to relu_conv's backward with an all-ones mask and no output
-    # sparsity.
-    n, h, wd, c = x.shape
-    r, s, _, m = w.shape
-    u, v = dy.shape[1], dy.shape[2]
-    bm, bk, bn = policy.block
-    dy32 = dy.astype(jnp.float32)
-    st_dy = _grad_sparse_tensor(dy32, policy, m)
-    plh = _pad_amounts(h, r, stride, padding)
-    plw = _pad_amounts(wd, s, stride, padding)
-    dyd = _dilate_hw(dy32, stride)
-    hd, wdd = dyd.shape[1], dyd.shape[2]
-    pg_h_lo = r - 1 - plh[0]
-    pg_h_hi = h - (hd + pg_h_lo - r + 1)
-    pg_w_lo = s - 1 - plw[0]
-    pg_w_hi = wd - (wdd + pg_w_lo - s + 1)
-    gpad4 = (pg_h_lo, pg_h_hi, pg_w_lo, pg_w_hi)
-    gpatches = _im2col(dyd, r, s, 1, gpad4)
-    gm = gpatches.reshape(n * h * wd, r * s * m)
-    wt = jnp.flip(w, axis=(0, 1)).transpose(0, 1, 3, 2).reshape(r * s * m, c)
-    g_mask = None
-    if st_dy.bitmap is not None:
-        gcg = st_dy.gran[1]
-        gfb4 = st_dy.bitmap.reshape(n, u, v, m // gcg)
-        gpb = _im2col(_dilate_hw(gfb4, stride), r, s, 1, gpad4)
-        g_mask = coarsen_bitmap(gpb.reshape(n * h * wd, -1), (1, gcg),
-                                (bm, bk))
-    dx = _mm(gm, wt.astype(jnp.float32), None, g_mask, None, policy, x.dtype)
-    dx = dx.reshape(n, h, wd, c)
-
-    pad4 = (plh[0], plh[1], plw[0], plw[1])
-    patches = _im2col(x, r, s, stride, pad4)
-    pm = patches.reshape(n * u * v, r * s * c).astype(jnp.float32)
-    dym = dy32.reshape(n * u * v, m)
-    pt = pm.T
-    pt_mask = None
-    if st.bitmap is not None and _needs_grad_bitmap(policy):
-        pt_mask = _patch_bitmap(st, (n, h, wd, c), r, s, stride, pad4) \
-            .t_mask_for((bm, bk))
-    dym_mask = st_dy.mask_for((bk, bn))
-    dw = _mm(pt, dym, None, pt_mask, dym_mask, policy, jnp.float32)
-    return dx, dw.reshape(r, s, c, m).astype(w.dtype)
+def depthwise_conv(x: jnp.ndarray, w: jnp.ndarray, stride: int,
+                   padding: str, policy: SparsityPolicy):
+    """Depthwise conv over signed x (no fused ReLU): groups == C."""
+    return _conv_engine(x, w, stride, padding, policy, False, x.shape[-1])
 
 
-conv.defvjp(_conv_fwd, _conv_bwd)
+# Back-compat aliases used by tests/benchmarks that reach for the raw pair.
+_relu_conv_fwd = functools.partial(_conv_engine_fwd, fused_relu=True,
+                                   groups=1)
+_conv_fwd = functools.partial(_conv_engine_fwd, fused_relu=False, groups=1)

@@ -56,34 +56,56 @@ def _bitmap_padded(x2d: jnp.ndarray, b0: int, b1: int) -> jnp.ndarray:
 
 
 def _mm(a, b, out_mask, a_mask, b_mask, policy: SparsityPolicy, out_dtype,
-        epilogue: Optional[jnp.ndarray] = None):
+        epilogue: Optional[jnp.ndarray] = None,
+        block: Optional[Tuple[int, int, int]] = None):
     """Dispatch a masked matmul through the policy's kernel impl.
 
     ``epilogue`` is an (M, N) Hadamard multiplier fused into the kernel's
     accumulator writeback (policy.fuse_epilogue) or applied as a separate
-    elementwise pass (ablation / xla_ref equivalence)."""
+    elementwise pass (ablation / xla_ref equivalence).
+
+    3-D operands (leading group axis: (G, M, K) @ (G, K, N)) dispatch to
+    the grouped kernels — the GEMM form of grouped/depthwise convs, with
+    per-group masks and the same epilogue/compact-queue semantics.
+    ``block`` overrides ``policy.block`` (the conv engine passes degenerate
+    per-GEMM tiles for tiny per-group dims)."""
+    blk = block or policy.block
+    grouped = a.ndim == 3
     if policy.kernel_impl == "pallas":
+        mmfn = kops.grouped_masked_matmul if grouped else kops.masked_matmul
         if epilogue is not None and not policy.fuse_epilogue:
-            out = kops.masked_matmul(
+            out = mmfn(
                 a, b, out_mask=out_mask, a_mask=a_mask, b_mask=b_mask,
-                block=policy.block, out_dtype=jnp.float32,
+                block=blk, out_dtype=jnp.float32,
                 compact=policy.work_redistribution,
                 queue_builder=policy.queue_builder, interpret=policy.interpret,
             )
             return (out * epilogue.astype(jnp.float32)).astype(out_dtype)
-        return kops.masked_matmul(
+        return mmfn(
             a, b, out_mask=out_mask, a_mask=a_mask, b_mask=b_mask,
-            block=policy.block, out_dtype=out_dtype,
+            block=blk, out_dtype=out_dtype,
             compact=policy.work_redistribution,
             queue_builder=policy.queue_builder,
             epilogue_mult=epilogue, interpret=policy.interpret,
         )
     # xla_ref: numerically-equivalent dense compute + masking.  The skipped
     # work is accounted by core.costmodel, not saved on this backend.
+    if grouped:
+        out = jnp.einsum("gmk,gkn->gmn", a.astype(jnp.float32),
+                         b.astype(jnp.float32))
+        if out_mask is not None:
+            bm, _, bn = blk
+            _, m, n = out.shape
+            em = jax.vmap(lambda mk: kref.expand_block_mask(mk, bm, bn))(
+                out_mask.astype(jnp.float32))
+            out = out * em[:, :m, :n]
+        if epilogue is not None:
+            out = out * epilogue.astype(jnp.float32)
+        return out.astype(out_dtype)
     out = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
                   preferred_element_type=jnp.float32)
     if out_mask is not None:
-        bm, _, bn = policy.block
+        bm, _, bn = blk
         m, n = out.shape
         em = kref.expand_block_mask(out_mask.astype(jnp.float32), bm, bn)
         out = out * em[:m, :n]
@@ -174,8 +196,11 @@ def _act_matmul_bwd(policy: SparsityPolicy, act: str, res, dy):
     st_dy = SparseTensor(dy32, None, None)
     if _needs_grad_bitmap(policy):
         ggran = linear_grad_granularity(policy.block)
-        st_dy = SparseTensor(dy32, scan_bitmap(dy32, ggran, kind="grad"),
-                             ggran)
+        st_dy = SparseTensor(
+            dy32,
+            scan_bitmap(dy32, ggran, kind="grad", impl=policy.kernel_impl,
+                        interpret=policy.interpret),
+            ggran)
 
     # --- dx_pre = (dy @ Wᵀ) ⊙ σ'(x_pre): OUTPUT (+INPUT) sparsity ---
     # out_mask = the forward ReLU bitmap, re-tiled: footprint(σ'(x_pre)) ==
@@ -221,7 +246,11 @@ def _matmul_fwd(x, w, policy: SparsityPolicy):
     if policy.kernel_impl == "pallas" and (
             policy.use_input_sparsity_fp or policy.use_input_sparsity_bp):
         gran = linear_act_granularity(policy.block)
-        st = SparseTensor(x, scan_bitmap(x, gran, kind="act"), gran)
+        st = SparseTensor(
+            x,
+            scan_bitmap(x, gran, kind="act", impl=policy.kernel_impl,
+                        interpret=policy.interpret),
+            gran)
     a_mask = st.mask_for((bm, bk)) \
         if policy.use_input_sparsity_fp and policy.kernel_impl == "pallas" \
         else None
@@ -237,8 +266,11 @@ def _matmul_bwd(policy: SparsityPolicy, res, dy):
     st_dy = SparseTensor(dy32, None, None)
     if _needs_grad_bitmap(policy):
         ggran = linear_grad_granularity(policy.block)
-        st_dy = SparseTensor(dy32, scan_bitmap(dy32, ggran, kind="grad"),
-                             ggran)
+        st_dy = SparseTensor(
+            dy32,
+            scan_bitmap(dy32, ggran, kind="grad", impl=policy.kernel_impl,
+                        interpret=policy.interpret),
+            ggran)
     dx = _mm(dy32, w.astype(jnp.float32).T, None, st_dy.mask_for((bm, bk)),
              None, policy, x.dtype)
     xt = x.astype(jnp.float32).T

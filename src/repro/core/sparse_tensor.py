@@ -48,11 +48,22 @@ def coarsen_bitmap(bitmap: jnp.ndarray, gran: Tuple[int, int],
 
     Exact: the coarse cell is the OR of its member fine cells; ragged edges
     are zero-padded (padding describes zero data, so OR-identity).
+
+    A 3-D bitmap is treated as a batch of independent 2-D bitmaps over its
+    leading axis — the per-group masks of grouped/depthwise convs, where
+    the batch axis IS the group axis and cells never straddle groups.
     """
     gr, gc = gran
     b0, b1 = block
     assert b0 % gr == 0 and b1 % gc == 0, (gran, block)
     f0, f1 = b0 // gr, b1 // gc
+    if bitmap.ndim == 3:
+        g, r, c = bitmap.shape
+        rp, cp = _ceil_div(r, f0) * f0, _ceil_div(c, f1) * f1
+        if rp != r or cp != c:
+            bitmap = jnp.pad(bitmap, ((0, 0), (0, rp - r), (0, cp - c)))
+        return bitmap.reshape(g, rp // f0, f0, cp // f1, f1) \
+            .max(axis=(2, 4)).astype(jnp.int32)
     r, c = bitmap.shape
     rp, cp = _ceil_div(r, f0) * f0, _ceil_div(c, f1) * f1
     if rp != r or cp != c:
@@ -121,7 +132,8 @@ def linear_grad_granularity(block: Tuple[int, int, int]) -> Tuple[int, int]:
 
 
 def conv_channel_granularity(channels: int,
-                             block: Tuple[int, int, int]) -> int:
+                             block: Tuple[int, int, int],
+                             groups: int = 1) -> int:
     """Channel granularity for a conv tensor's (pixels, channels) view.
 
     Row granularity is fixed at 1 (per pixel) so the bitmap stays spatially
@@ -129,9 +141,19 @@ def conv_channel_granularity(channels: int,
     bitmap itself.  The channel granularity must divide the channel count
     (tap segments in the im2col K-axis must tile evenly) and every block
     edge a derived mask can take (bm for transposed WG masks, bk/bn for
-    operand masks)."""
+    operand masks).
+
+    Group-boundary contract: for a grouped conv the granularity must also
+    divide ``channels // groups``, so no coarsened cell ever straddles two
+    groups — a straddling cell would let one group's live data mark another
+    group's tile live (conservative, but it breaks the per-group mask
+    slicing, which assumes cells nest inside groups).  Depthwise
+    (``groups == channels``) degenerates to per-channel granularity 1.
+    """
     bm, bk, bn = block
-    return math.gcd(math.gcd(channels, bm), math.gcd(bk, bn))
+    assert channels % groups == 0, (channels, groups)
+    per_group = channels // groups
+    return math.gcd(math.gcd(per_group, bm), math.gcd(bk, bn))
 
 
 # ---------------------------------------------------------------------------
@@ -139,9 +161,18 @@ def conv_channel_granularity(channels: int,
 # ---------------------------------------------------------------------------
 
 def scan_bitmap(x2d: jnp.ndarray, gran: Tuple[int, int],
-                *, kind: str = "act") -> jnp.ndarray:
+                *, kind: str = "act", impl: str = "xla_ref",
+                interpret: Optional[bool] = None) -> jnp.ndarray:
     """One counted dense scan -> fine bitmap (used for signed data — raw
-    inputs, incoming gradients — where no fused encode produced one)."""
+    inputs, incoming gradients — where no fused encode produced one).
+
+    ``impl="pallas"`` routes through the TPU-native ``kernels.bitmap_scan``
+    kernel (counted as ``scan_pallas:<kind>``); the default stays the XLA
+    reference (counted as ``scan:<kind>``) for the xla_ref policy."""
+    if impl == "pallas":
+        from repro.kernels import ops as kops  # local: avoids import cycle
+        return kops.bitmap_scan(x2d, block=gran, kind=kind,
+                                interpret=interpret)
     gr, gc = gran
     m, n = x2d.shape
     mp, np_ = _ceil_div(m, gr) * gr, _ceil_div(n, gc) * gc

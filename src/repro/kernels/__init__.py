@@ -5,7 +5,9 @@ ops.py — jit'd public wrappers; ref.py — pure-jnp oracles.
 """
 from . import ops, queue_builder, ref, stats  # noqa: F401
 from .ops import (  # noqa: F401
+    bitmap_scan,
     build_queue,
+    grouped_masked_matmul,
     masked_matmul,
     relu_bwd_masked,
     relu_encode,

@@ -1,0 +1,68 @@
+"""Pallas block-any-nonzero bitmap scan — the encoder for SIGNED data.
+
+``kernels.relu_encode`` makes the activation bitmap a free byproduct of the
+forward ReLU, but two tensor classes have no ReLU to fuse into: raw inputs
+(plain ``conv``/``matmul`` at input-layer or post-pool boundaries) and
+incoming gradients (the BP dy scan).  The seed routed those through the
+``kernels.ref`` XLA oracle even on the pallas path; this kernel is the
+TPU-native replacement — one pass over the data, emitting the fine
+(gr, gc) bitmap directly (partial progress on the ROADMAP "TPU-native
+scan_bitmap" item: the scan is now a Pallas kernel; fusing it into the
+*producing* op's epilogue is the remaining step).
+
+Same granularity/launch-slab decoupling as relu_encode: one grid step
+covers an (lr, lc) slab and reduces it with a single reshape-max, so the
+per-row granularities the conv path needs stay cheap to launch.  Signed
+data ⇒ the liveness predicate is ``|x| > 0``, not ``x > 0``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+
+def _bitmap_scan_kernel(x_ref, bm_ref, *, gr: int, gc: int):
+    x = x_ref[...].astype(jnp.float32)
+    lr, lc = x.shape
+    xb = jnp.abs(x).reshape(lr // gr, gr, lc // gc, gc)
+    bm_ref[...] = (jnp.max(xb, axis=(1, 3)) > 0).astype(jnp.int32)
+
+
+def bitmap_scan_kernel(
+    x: jnp.ndarray,
+    *,
+    bm: int,
+    bn: int,
+    lr: int = 0,
+    lc: int = 0,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns the (M//bm, N//bn) int32 any-nonzero bitmap of signed ``x``.
+
+    (bm, bn) is the BITMAP granularity; (lr, lc) the launch tile (defaults:
+    whole array — the ops wrapper picks ~8-row slabs).
+    """
+    m, n = x.shape
+    lr = lr or m
+    lc = lc or n
+    assert m % lr == 0 and n % lc == 0, (x.shape, lr, lc)
+    assert lr % bm == 0 and lc % bn == 0, (lr, lc, bm, bn)
+    ni, nj = m // lr, n // lc
+    fr, fc = lr // bm, lc // bn
+    fn = pl.pallas_call(
+        functools.partial(_bitmap_scan_kernel, gr=bm, gc=bn),
+        grid=(ni, nj),
+        in_specs=[pl.BlockSpec((lr, lc), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((fr, fc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m // bm, n // bn), jnp.int32),
+        interpret=interpret,
+    )
+    return fn(x)

@@ -176,6 +176,257 @@ def masked_matmul_kernel(
 
 
 # ---------------------------------------------------------------------------
+# Grouped predicated kernel — one launch covers all G independent GEMMs of a
+# grouped/depthwise conv (grid gains a leading group dimension; masks carry a
+# leading G axis).  Semantics per group are identical to the 2-D kernel.
+# ---------------------------------------------------------------------------
+
+def _gmm_kernel(out_m_ref, a_m_ref, b_m_ref, a_ref, b_ref, o_ref, acc_ref):
+    """Grid = (G, Mb, Nb, Kb); K innermost so ``acc_ref`` accumulates."""
+    g = pl.program_id(0)
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    k = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(k == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    active = (
+        (out_m_ref[g, i, j] != 0)
+        & (a_m_ref[g, i, k] != 0)
+        & (b_m_ref[g, k, j] != 0)
+    )
+
+    @pl.when(active)
+    def _issue_mxu():
+        acc_ref[...] += jnp.dot(
+            a_ref[0], b_ref[0], preferred_element_type=jnp.float32
+        )
+
+    @pl.when(k == nk - 1)
+    def _write():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _gmm_epilogue_kernel(out_m_ref, a_m_ref, b_m_ref, a_ref, b_ref, mult_ref,
+                         o_ref, acc_ref):
+    """Grouped predicated kernel + fused σ′-Hadamard epilogue."""
+    g = pl.program_id(0)
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    k = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(k == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    active = (
+        (out_m_ref[g, i, j] != 0)
+        & (a_m_ref[g, i, k] != 0)
+        & (b_m_ref[g, k, j] != 0)
+    )
+
+    @pl.when(active)
+    def _issue_mxu():
+        acc_ref[...] += jnp.dot(
+            a_ref[0], b_ref[0], preferred_element_type=jnp.float32
+        )
+
+    @pl.when(k == nk - 1)
+    def _write():
+        o_ref[0] = (acc_ref[...] * mult_ref[0]).astype(o_ref.dtype)
+
+
+def grouped_masked_matmul_kernel(
+    a: jnp.ndarray,          # (G, M, K) block-aligned
+    b: jnp.ndarray,          # (G, K, N)
+    out_mask: jnp.ndarray,   # (G, Mb, Nb) int32
+    a_mask: jnp.ndarray,     # (G, Mb, Kb)
+    b_mask: jnp.ndarray,     # (G, Kb, Nb)
+    *,
+    bm: int,
+    bk: int,
+    bn: int,
+    out_dtype=jnp.float32,
+    epilogue_mult: Optional[jnp.ndarray] = None,   # (G, M, N) f32
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Raw grouped predicated launch: G independent masked GEMMs, one grid."""
+    g, m, k = a.shape
+    g2, k2, n = b.shape
+    assert g == g2 and k == k2, (a.shape, b.shape)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (a.shape, bm, bk, bn)
+    ni, nj, nk = m // bm, n // bn, k // bk
+    assert out_mask.shape == (g, ni, nj), (out_mask.shape, (g, ni, nj))
+    assert a_mask.shape == (g, ni, nk), (a_mask.shape, (g, ni, nk))
+    assert b_mask.shape == (g, nk, nj), (b_mask.shape, (g, nk, nj))
+
+    in_specs = [
+        pl.BlockSpec((1, bm, bk), lambda gi, i, j, k, *_: (gi, i, k)),
+        pl.BlockSpec((1, bk, bn), lambda gi, i, j, k, *_: (gi, k, j)),
+    ]
+    operands = [a, b]
+    kernel = _gmm_kernel
+    if epilogue_mult is not None:
+        assert epilogue_mult.shape == (g, m, n), epilogue_mult.shape
+        in_specs.append(
+            pl.BlockSpec((1, bm, bn), lambda gi, i, j, k, *_: (gi, i, j)))
+        operands.append(epilogue_mult.astype(jnp.float32))
+        kernel = _gmm_epilogue_kernel
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(g, ni, nj, nk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bm, bn), lambda gi, i, j, k, *_: (gi, i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    fn = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((g, m, n), out_dtype),
+        interpret=interpret,
+    )
+    return fn(
+        out_mask.astype(jnp.int32),
+        a_mask.astype(jnp.int32),
+        b_mask.astype(jnp.int32),
+        *operands,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Grouped compacted kernel — ONE queue spans all groups: slots carry (g, i, j)
+# triples in lexicographic order, so the work-redistribution schedule stays a
+# single uniform stream even when every group contributes only a few tiles
+# (the depthwise regime).
+# ---------------------------------------------------------------------------
+
+def _gmm_compact_kernel(
+    gg_ref, ii_ref, jj_ref, n_act_ref, a_m_ref, b_m_ref, a_ref, b_ref,
+    o_ref, acc_ref
+):
+    """Grid = (S, Kb).  Step s processes active tile (gg[s], ii[s], jj[s])."""
+    s = pl.program_id(0)
+    k = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(k == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    g = gg_ref[s]
+    i = ii_ref[s]
+    j = jj_ref[s]
+    live = s < n_act_ref[0]
+    active = live & (a_m_ref[g, i, k] != 0) & (b_m_ref[g, k, j] != 0)
+
+    @pl.when(active)
+    def _issue_mxu():
+        acc_ref[...] += jnp.dot(
+            a_ref[0], b_ref[0], preferred_element_type=jnp.float32
+        )
+
+    @pl.when(k == nk - 1)
+    def _write():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _gmm_compact_epilogue_kernel(
+    gg_ref, ii_ref, jj_ref, n_act_ref, a_m_ref, b_m_ref, a_ref, b_ref,
+    mult_ref, o_ref, acc_ref
+):
+    s = pl.program_id(0)
+    k = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(k == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    g = gg_ref[s]
+    i = ii_ref[s]
+    j = jj_ref[s]
+    live = s < n_act_ref[0]
+    active = live & (a_m_ref[g, i, k] != 0) & (b_m_ref[g, k, j] != 0)
+
+    @pl.when(active)
+    def _issue_mxu():
+        acc_ref[...] += jnp.dot(
+            a_ref[0], b_ref[0], preferred_element_type=jnp.float32
+        )
+
+    @pl.when(k == nk - 1)
+    def _write():
+        o_ref[...] = (acc_ref[...] * mult_ref[0]).astype(o_ref.dtype)
+
+
+def grouped_compact_masked_matmul_kernel(
+    a: jnp.ndarray,           # (G, M, K)
+    b: jnp.ndarray,           # (G, K, N)
+    gg: jnp.ndarray,          # (S,) int32 — active tile group coords
+    ii: jnp.ndarray,          # (S,) int32
+    jj: jnp.ndarray,          # (S,) int32
+    n_active: jnp.ndarray,    # (1,) int32
+    a_mask: jnp.ndarray,      # (G, Mb, Kb)
+    b_mask: jnp.ndarray,      # (G, Kb, Nb)
+    *,
+    bm: int,
+    bk: int,
+    bn: int,
+    out_dtype=jnp.float32,
+    epilogue_mult: Optional[jnp.ndarray] = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns the COMPACTED output (S, bm, bn); caller scatters to (G, M, N)."""
+    g, m, k = a.shape
+    g2, k2, n = b.shape
+    assert g == g2 and k == k2
+    nk = k // bk
+    (s_cap,) = ii.shape
+    assert gg.shape == (s_cap,) and jj.shape == (s_cap,)
+
+    in_specs = [
+        pl.BlockSpec((1, bm, bk), lambda s, k, gg, ii, jj, *_: (gg[s], ii[s], k)),
+        pl.BlockSpec((1, bk, bn), lambda s, k, gg, ii, jj, *_: (gg[s], k, jj[s])),
+    ]
+    operands = [a, b]
+    kernel = _gmm_compact_kernel
+    if epilogue_mult is not None:
+        assert epilogue_mult.shape == (g, m, n), epilogue_mult.shape
+        in_specs.append(pl.BlockSpec(
+            (1, bm, bn), lambda s, k, gg, ii, jj, *_: (gg[s], ii[s], jj[s])))
+        operands.append(epilogue_mult.astype(jnp.float32))
+        kernel = _gmm_compact_epilogue_kernel
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=6,
+        grid=(s_cap, nk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bm, bn), lambda s, k, *_: (s, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((1, bm, bn), jnp.float32)],
+    )
+    fn = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((s_cap, bm, bn), out_dtype),
+        interpret=interpret,
+    )
+    return fn(
+        gg.astype(jnp.int32),
+        ii.astype(jnp.int32),
+        jj.astype(jnp.int32),
+        n_active.astype(jnp.int32),
+        a_mask.astype(jnp.int32),
+        b_mask.astype(jnp.int32),
+        *operands,
+    )
+
+
+# ---------------------------------------------------------------------------
 # Compacted (work-redistribution) kernel
 # ---------------------------------------------------------------------------
 

@@ -18,7 +18,13 @@ import jax
 import jax.numpy as jnp
 
 from . import ref, stats
-from .masked_matmul import compact_masked_matmul_kernel, masked_matmul_kernel
+from .bitmap_scan import bitmap_scan_kernel
+from .masked_matmul import (
+    compact_masked_matmul_kernel,
+    grouped_compact_masked_matmul_kernel,
+    grouped_masked_matmul_kernel,
+    masked_matmul_kernel,
+)
 from .queue_builder import build_queue_kernel
 from .relu_encode import relu_encode_kernel
 
@@ -220,6 +226,138 @@ def masked_matmul(
     else:
         out = _predicated()
     return out[:m, :n]
+
+
+def grouped_masked_matmul(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    out_mask: Optional[jnp.ndarray] = None,
+    a_mask: Optional[jnp.ndarray] = None,
+    b_mask: Optional[jnp.ndarray] = None,
+    *,
+    block: Tuple[int, int, int] = DEFAULT_BLOCK,
+    out_dtype=jnp.float32,
+    compact: bool = False,
+    max_active_blocks: Optional[int] = None,
+    queue_builder: str = "prefix_sum",
+    epilogue_mult: Optional[jnp.ndarray] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Block-sparse batched ``a[g] @ b[g]`` over a leading group axis — the
+    GEMM form of grouped/depthwise convs.
+
+    Operands are (G, M, K) and (G, K, N); masks carry a leading G axis and
+    are per-group block bitmaps with exactly ``masked_matmul``'s semantics
+    — groups never mix (the group-boundary contract).  ``compact=True``
+    builds ONE queue spanning all groups: the (G, Mb, Nb) out_mask is
+    flattened row-major — lexicographic ⟨g, i, j⟩, the WDU dispatch order
+    lifted to the group axis — and compacted by the same builder backends
+    as the 2-D path, so depthwise layers (many groups, few tiles each)
+    still launch a single uniform work stream.  Overflow falls back to the
+    grouped predicated schedule — never a silent truncation.
+    """
+    g, m, k = a.shape
+    g2, k2, n = b.shape
+    assert g == g2 and k == k2, (a.shape, b.shape)
+    bm, bk, bn = block
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    ni, nk, nj = mp // bm, kp // bk, np_ // bn
+
+    def _pad3(x, d1, d2):
+        p1, p2 = d1 - x.shape[1], d2 - x.shape[2]
+        if p1 == 0 and p2 == 0:
+            return x
+        return jnp.pad(x, ((0, 0), (0, p1), (0, p2)))
+
+    a_p = _pad3(a, mp, kp)
+    b_p = _pad3(b, kp, np_)
+    mult_p = None
+    if epilogue_mult is not None:
+        assert epilogue_mult.shape == (g, m, n), epilogue_mult.shape
+        mult_p = _pad3(epilogue_mult.astype(jnp.float32), mp, np_)
+
+    def _pad_mask3(mask, nb0, nb1):
+        if mask is None:
+            return jnp.ones((g, nb0, nb1), jnp.int32)
+        mask = mask.astype(jnp.int32)
+        return _pad3(mask, nb0, nb1)
+
+    om = _pad_mask3(out_mask, ni, nj)
+    am = _pad_mask3(a_mask, ni, nk)
+    bmask = _pad_mask3(b_mask, nk, nj)
+
+    itp = _use_interpret(interpret)
+
+    def _predicated():
+        return grouped_masked_matmul_kernel(
+            a_p, b_p, om, am, bmask,
+            bm=bm, bk=bk, bn=bn, out_dtype=out_dtype,
+            epilogue_mult=mult_p, interpret=itp,
+        )
+
+    if compact:
+        s_cap = max_active_blocks if max_active_blocks is not None \
+            else g * ni * nj
+        # One queue over all groups: flatten (G, Mb, Nb) to (G·Mb, Nb) so
+        # the row-major builder order IS lexicographic (g, i, j); decode the
+        # group coordinate back out of the fused row index.
+        fi, jj, n_live_v = build_queue(
+            om.reshape(g * ni, nj), capacity=s_cap, builder=queue_builder,
+            interpret=itp)
+        gg = fi // ni
+        ii = fi % ni
+        n_live = n_live_v[0]
+        n_active = jnp.minimum(n_live, s_cap).reshape(1)
+
+        def _compact():
+            compacted = grouped_compact_masked_matmul_kernel(
+                a_p, b_p, gg, ii, jj, n_active, am, bmask,
+                bm=bm, bk=bk, bn=bn, out_dtype=out_dtype,
+                epilogue_mult=mult_p, interpret=itp,
+            )
+            live = (jnp.arange(s_cap) < n_active[0]).astype(out_dtype)
+            masked = compacted * live[:, None, None]
+            sg = jnp.where(jnp.arange(s_cap) < n_active[0], gg, 0)
+            si = jnp.where(jnp.arange(s_cap) < n_active[0], ii, 0)
+            sj = jnp.where(jnp.arange(s_cap) < n_active[0], jj, 0)
+            out_tiles = jnp.zeros((g, ni, nj, bm, bn), out_dtype)
+            out_tiles = out_tiles.at[sg, si, sj].add(masked)
+            return out_tiles.transpose(0, 1, 3, 2, 4).reshape(g, mp, np_)
+
+        if s_cap >= g * ni * nj:
+            out = _compact()
+        else:
+            out = jax.lax.cond(n_live > s_cap, _predicated, _compact)
+    else:
+        out = _predicated()
+    return out[:, :m, :n]
+
+
+def bitmap_scan(
+    x: jnp.ndarray,
+    *,
+    block: Tuple[int, int] = (DEFAULT_BLOCK[0], DEFAULT_BLOCK[2]),
+    kind: str = "act",
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Pallas block-any-nonzero bitmap of SIGNED data at granularity
+    ``block`` — the encoder for tensors with no ReLU to fuse into (raw
+    inputs, incoming gradients).  Pads, launches, unpads.
+
+    Counted under the distinct ``scan_pallas:<kind>`` stats key so the
+    audit can tell TPU-native scans from the retained XLA-reference scans
+    (``scan:<kind>``); both still count toward the one-computation-per-
+    tensor-per-step budget.
+    """
+    m, n = x.shape
+    bm, bn = block
+    lr = bm * max(1, -(-8 // bm))
+    mp, np_ = _ceil_to(m, lr), _ceil_to(n, bn)
+    x_p = _pad_to(x, mp, np_)
+    stats.record(f"scan_pallas:{kind}")
+    bitmap = bitmap_scan_kernel(x_p, bm=bm, bn=bn, lr=lr, lc=np_,
+                                interpret=_use_interpret(interpret))
+    return bitmap[: _ceil_to(m, bm) // bm, :]
 
 
 def relu_encode(

@@ -76,6 +76,50 @@ def masked_matmul(
 
 
 # ---------------------------------------------------------------------------
+# grouped masked_matmul oracle — G independent masked GEMMs
+# ---------------------------------------------------------------------------
+
+def grouped_masked_matmul(
+    a: jnp.ndarray,                              # (G, M, K)
+    b: jnp.ndarray,                              # (G, K, N)
+    out_mask: Optional[jnp.ndarray] = None,      # (G, M//bm, N//bn)
+    a_mask: Optional[jnp.ndarray] = None,        # (G, M//bm, K//bk)
+    b_mask: Optional[jnp.ndarray] = None,        # (G, K//bk, N//bn)
+    *,
+    bm: int,
+    bk: int,
+    bn: int,
+    out_dtype=jnp.float32,
+    epilogue_mult: Optional[jnp.ndarray] = None,  # (G, M, N)
+) -> jnp.ndarray:
+    """Oracle for the grouped block-sparse GEMM: per-group semantics are
+    exactly ``masked_matmul``'s; groups never mix (the group-boundary
+    contract of grouped/depthwise convs)."""
+    g, m, k = a.shape
+
+    def _expand3(mask, b0, b1):
+        # expand_block_mask over the flattened group-major rows: groups stay
+        # contiguous, so one 2-D expansion serves all G bitmaps.
+        gg, r, c = mask.shape
+        return expand_block_mask(
+            mask.astype(jnp.float32).reshape(gg * r, c), b0, b1
+        ).reshape(gg, r * b0, c * b1)
+
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    if a_mask is not None:
+        af = af * _expand3(a_mask, bm, bk)
+    if b_mask is not None:
+        bf = bf * _expand3(b_mask, bk, bn)
+    out = jnp.einsum("gmk,gkn->gmn", af, bf)
+    if out_mask is not None:
+        out = out * _expand3(out_mask, bm, bn)
+    if epilogue_mult is not None:
+        out = out * epilogue_mult.astype(jnp.float32)
+    return out.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
 # relu_encode oracle
 # ---------------------------------------------------------------------------
 

@@ -22,9 +22,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.policy import DC, SparsityPolicy
-from repro.core.sparse_conv import conv as sconv, relu_conv
+from repro.core.sparse_conv import (
+    conv as sconv, depthwise_conv, depthwise_relu_conv, relu_conv,
+)
 from repro.core.sparse_linear import matmul as smatmul
 from repro.core.costmodel import ConvSpec
+from repro.kernels import stats
 
 Params = Dict[str, Any]
 
@@ -63,16 +66,24 @@ class Trace:
     grad_in: jnp.ndarray          # gradient arriving at the conv's output
 
 
+def resolved_out_ch(node: ConvNode, in_ch: int) -> int:
+    """Depthwise output width follows the input; the IR leaves it 0 until a
+    walk supplies the producer's channel count.  Pure — the IR is never
+    mutated, so init / conv_specs / re-init in any order agree."""
+    return in_ch if node.depthwise else node.out_ch
+
+
 def conv_init(key, node: ConvNode, in_ch: int, dtype=jnp.float32) -> Params:
     k = node.kernel
     c = 1 if node.depthwise else in_ch
+    out_ch = resolved_out_ch(node, in_ch)
     fan_in = k * k * c
-    w = jax.random.normal(key, (k, k, c, node.out_ch), jnp.float32) \
+    w = jax.random.normal(key, (k, k, c, out_ch), jnp.float32) \
         * (2.0 / fan_in) ** 0.5
     p: Params = {"w": w.astype(dtype)}
     if node.has_bn:
-        p["bn_scale"] = jnp.ones((node.out_ch,), jnp.float32)
-        p["bn_bias"] = jnp.zeros((node.out_ch,), jnp.float32)
+        p["bn_scale"] = jnp.ones((out_ch,), jnp.float32)
+        p["bn_bias"] = jnp.zeros((out_ch,), jnp.float32)
     return p
 
 
@@ -87,12 +98,23 @@ def apply_conv(p: Params, x_pre: jnp.ndarray, node: ConvNode,
     """x_pre is PRE-activation of the producer if input_is_relu (the fused
     relu_conv consumes it), else the raw input."""
     if node.depthwise:
-        # depthwise = grouped conv; run per-channel via feature_group_count.
-        x = jnp.maximum(x_pre, 0) if input_is_relu else x_pre
-        y = jax.lax.conv_general_dilated(
-            x, p["w"], (node.stride, node.stride), node.padding,
-            dimension_numbers=("NHWC", "HWIO", "NHWC"),
-            feature_group_count=x.shape[-1])
+        if p["w"].shape[2] != 1 or x_pre.shape[-1] != p["w"].shape[3]:
+            # Defensive escape hatch for malformed group structure; counted
+            # so the audit can assert the sparse path never loses a layer.
+            stats.record("conv:dense_fallback")
+            x = jnp.maximum(x_pre, 0) if input_is_relu else x_pre
+            y = jax.lax.conv_general_dilated(
+                x, p["w"], (node.stride, node.stride), node.padding,
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                feature_group_count=x.shape[-1])
+        elif input_is_relu:
+            # depthwise through the sparse unit: groups == C, fused encode —
+            # the dw→pw chain keeps the pre-activation contract end to end.
+            y = depthwise_relu_conv(x_pre, p["w"], node.stride, node.padding,
+                                    policy)
+        else:
+            y = depthwise_conv(x_pre, p["w"], node.stride, node.padding,
+                               policy)
     elif input_is_relu:
         y = relu_conv(x_pre, p["w"], node.stride, node.padding, policy)
     else:
@@ -223,10 +245,8 @@ class CNNModel:
         def walk(nodes, in_ch):
             for node in nodes:
                 if isinstance(node, ConvNode):
-                    if node.depthwise:
-                        node.out_ch = in_ch     # resolve before weight init
                     params[node.name] = conv_init(next(keys), node, in_ch, dtype)
-                    in_ch = node.out_ch
+                    in_ch = resolved_out_ch(node, in_ch)
                 elif isinstance(node, PoolNode):
                     pass
                 elif isinstance(node, Branch):
@@ -308,10 +328,11 @@ class CNNModel:
         def walk(nodes, in_ch, hw, input_is_relu):
             for node in nodes:
                 if isinstance(node, ConvNode):
-                    out_ch = in_ch if node.depthwise else node.out_ch
+                    out_ch = resolved_out_ch(node, in_ch)
                     specs.append(ConvSpec(
                         name=node.name, c=in_ch, h=hw, w=hw, m=out_ch,
                         r=node.kernel, s=node.kernel, stride=node.stride,
+                        groups=in_ch if node.depthwise else 1,
                         has_bn=node.has_bn, input_is_relu=input_is_relu,
                         output_feeds_relu=node.relu_after, batch=batch))
                     in_ch = out_ch

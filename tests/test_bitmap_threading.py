@@ -225,6 +225,88 @@ def test_relu_conv_one_bitmap_op_per_step(stride, padding):
     assert stats.total("grad") == 1, stats.counts()
 
 
+def test_depthwise_threaded_masks_match_oracle():
+    """Per-group masks are column slices of the ONE bitmap: group g's slice
+    of the im2col'd bitmap equals a fresh scan of group g's im2col'd data
+    (the group-boundary granularity contract makes the slice exact)."""
+    from repro.core.policy import grouped_gemm_block
+    from repro.core.sparse_conv import (
+        _conv_engine_fwd, _group_patches,
+    )
+
+    policy = PALLAS_U
+    n, h, wd, c, groups = 2, 9, 11, 6, 2
+    r = s = 3
+    x_pre = _rand((n, h, wd, c), 40)
+    w = _rand((3, 3, c // groups, 8), 41, 0.0)
+    _, (st, _) = _conv_engine_fwd(x_pre, w, 1, "SAME", policy, True, groups)
+    assert st.bitmap is not None
+    gc = st.gran[1]
+    x = jnp.maximum(x_pre, 0)
+    plh = _pad_amounts(h, r, 1, "SAME")
+    plw = _pad_amounts(wd, s, 1, "SAME")
+    pad4 = (plh[0], plh[1], plw[0], plw[1])
+    pm = _im2col(x, r, s, 1, pad4).reshape(-1, r * s * c)
+    cg = c // groups
+    blk = grouped_gemm_block(policy, (pm.shape[0], r * s * cg, 4), (1, gc, 1))
+    pb = _patch_bitmap(st, (n, h, wd, c), r, s, 1, pad4)
+    pbg = _group_patches(pb.bitmap, r * s, groups)
+    derived = coarsen_bitmap(pbg, (1, gc), (blk[0], blk[1]))
+    data_g = _group_patches(pm, r * s, groups)
+    for g in range(groups):
+        np.testing.assert_array_equal(
+            derived[g], _bitmap_padded(data_g[g], blk[0], blk[1]))
+    # per-group out_mask == fresh scan of the group's σ' column slice
+    from repro.core.sparse_conv import _group_cols
+    mask2d = (x_pre > 0).reshape(n * h * wd, c).astype(jnp.float32)
+    om = coarsen_bitmap(_group_cols(st.bitmap, groups), (1, gc),
+                        (blk[0], blk[2]))
+    mg = _group_cols(mask2d, groups)
+    for g in range(groups):
+        np.testing.assert_array_equal(
+            om[g], _bitmap_padded(mg[g], blk[0], blk[2]))
+
+
+def test_depthwise_pw_chain_one_bitmap_per_activation():
+    """dw→pw chain (the MobileNet block): each activation is encoded ONCE
+    per step, each gradient scanned at most once — the per-activation
+    budget holds across the depthwise boundary too."""
+    from repro.core.sparse_conv import depthwise_relu_conv
+
+    c = 8
+    x = _rand((2, 8, 8, c), 42)
+    wdw = _rand((3, 3, 1, c), 43, 0.0)
+    wpw = _rand((1, 1, c, 12), 44, 0.0)
+
+    def chain(x, wdw, wpw):
+        y = depthwise_relu_conv(x, wdw, 1, "SAME", PALLAS)
+        return (relu_conv(y, wpw, 1, "SAME", PALLAS) ** 2).sum()
+
+    stats.reset()
+    _grad_eagerly(chain, x, wdw, wpw)
+    # two fused units (dw, pw) ⇒ two act encodes, two grad scans — exactly
+    assert stats.total("act") == 2, stats.counts()
+    assert stats.total("grad") == 2, stats.counts()
+    assert stats.counts().get("conv:dense_fallback", 0) == 0
+
+
+def test_pallas_scan_bitmap_distinct_stats_key():
+    """Signed-data bitmaps (plain conv input, incoming gradients) route
+    through the TPU-native kernels.bitmap_scan on the pallas path — counted
+    as ``scan_pallas:*``, with the XLA-reference ``scan:*`` key silent."""
+    x = _rand((2, 8, 8, 4), 45)
+    w = _rand((3, 3, 4, 6), 46, 0.0)
+    stats.reset()
+    _grad_eagerly(
+        lambda x, w: (sconv(x, w, 1, "SAME", PALLAS) ** 2).sum(), x, w)
+    c = stats.counts()
+    assert c.get("scan_pallas:act", 0) == 1, c
+    assert c.get("scan_pallas:grad", 0) == 1, c
+    assert c.get("scan:act", 0) == 0 and c.get("scan:grad", 0) == 0, c
+    # the per-step budget is unchanged: one computation per tensor
+    assert stats.total("act") == 1 and stats.total("grad") == 1
+
+
 def test_dc_policy_computes_no_bitmaps():
     x = _rand((16, 16), 24)
     w = _rand((16, 8), 25, 0.0)

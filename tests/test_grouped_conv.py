@@ -1,0 +1,251 @@
+"""Grouped/depthwise convs through the unified conv engine.
+
+The engine lowers every conv — dense, fused-ReLU, grouped, depthwise —
+onto the same masked-GEMM dispatch, so the paper's exactness claim must
+hold per group: gradients bit-match ``lax.conv_general_dilated`` autodiff
+for stride ∈ {1, 2}, padding ∈ {SAME, VALID}, groups ∈ {2, C}, on the
+pallas (compact × fused-epilogue), xla_ref, and DC paths.  Plus the
+group-boundary granularity contract and the degenerate block-shape rule.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import policy as pol
+from repro.core.policy import grouped_gemm_block
+from repro.core.sparse_conv import (
+    conv as sconv, depthwise_conv, depthwise_relu_conv, relu_conv,
+)
+from repro.core.sparse_tensor import conv_channel_granularity
+from repro.kernels import stats
+
+PALLAS = pol.IN_OUT_WR.with_(kernel_impl="pallas", block=(8, 16, 8))
+PALLAS_U = pol.IN_OUT.with_(kernel_impl="pallas", block=(16, 16, 16))
+C, M = 6, 12     # channels divisible by both group counts under test
+
+
+def _rand(shape, key, sparsify=0.0):
+    rng = np.random.default_rng(key)
+    x = rng.standard_normal(shape).astype(np.float32)
+    if sparsify:
+        x *= rng.random(shape) > sparsify
+    return jnp.asarray(x)
+
+
+def _dense(x, w, stride, padding, groups, relu):
+    xx = jnp.maximum(x, 0) if relu else x
+    return jax.lax.conv_general_dilated(
+        xx, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+
+
+@pytest.mark.parametrize("stride,padding", [(1, "SAME"), (2, "SAME"),
+                                            (1, "VALID"), (2, "VALID")])
+@pytest.mark.parametrize("groups", [2, C])
+@pytest.mark.parametrize("policy", [PALLAS, PALLAS_U, pol.IN_OUT, pol.DC])
+def test_grouped_relu_conv_grads_exact(stride, padding, groups, policy):
+    x = _rand((2, 9, 11, C), 1)
+    w = _rand((3, 3, C // groups, M), 2)
+    f = lambda x, w: (relu_conv(x, w, stride, padding, policy,
+                                groups=groups) ** 2).sum()
+    g = lambda x, w: (_dense(x, w, stride, padding, groups, True) ** 2).sum()
+    np.testing.assert_allclose(f(x, w), g(x, w), rtol=1e-4)
+    for a, b in zip(jax.grad(f, (0, 1))(x, w), jax.grad(g, (0, 1))(x, w)):
+        np.testing.assert_allclose(a, b, rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("stride,padding", [(1, "SAME"), (2, "VALID")])
+@pytest.mark.parametrize("groups", [2, C])
+def test_grouped_plain_conv_grads_exact(stride, padding, groups):
+    """Signed-input grouped conv (post-pool boundary): no fused ReLU."""
+    x = _rand((2, 8, 8, C), 3)
+    w = _rand((3, 3, C // groups, M), 4)
+    f = lambda x, w: (sconv(x, w, stride, padding, PALLAS_U,
+                            groups=groups) ** 2).sum()
+    g = lambda x, w: (_dense(x, w, stride, padding, groups, False) ** 2).sum()
+    np.testing.assert_allclose(f(x, w), g(x, w), rtol=1e-4)
+    for a, b in zip(jax.grad(f, (0, 1))(x, w), jax.grad(g, (0, 1))(x, w)):
+        np.testing.assert_allclose(a, b, rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("policy", [PALLAS, PALLAS.with_(fuse_epilogue=False),
+                                    PALLAS.with_(queue_builder="argsort")])
+def test_depthwise_relu_conv_grads_exact(stride, policy):
+    """groups == C through the convenience wrapper, compact schedule and
+    both σ′-epilogue modes — the MobileNet dw cell."""
+    c = 8
+    x = _rand((2, 8, 8, c), 5)
+    w = _rand((3, 3, 1, c), 6)
+    f = lambda x, w: (depthwise_relu_conv(x, w, stride, "SAME",
+                                          policy) ** 2).sum()
+    g = lambda x, w: (_dense(x, w, stride, "SAME", c, True) ** 2).sum()
+    np.testing.assert_allclose(f(x, w), g(x, w), rtol=1e-4)
+    for a, b in zip(jax.grad(f, (0, 1))(x, w), jax.grad(g, (0, 1))(x, w)):
+        np.testing.assert_allclose(a, b, rtol=3e-4, atol=3e-4)
+    # masked-out channels of dx are EXACT zeros (per-group epilogue
+    # losslessness — zeros of one group must not leak into another).
+    dx = jax.grad(f, 0)(x, w)
+    assert np.all(np.asarray(dx)[np.asarray(x) < 0] == 0.0)
+
+
+def test_depthwise_plain_conv_grads_exact():
+    c = 8
+    x = _rand((2, 8, 8, c), 7)
+    w = _rand((3, 3, 1, c), 8)
+    f = lambda x, w: (depthwise_conv(x, w, 1, "SAME", PALLAS_U) ** 2).sum()
+    g = lambda x, w: (_dense(x, w, 1, "SAME", c, False) ** 2).sum()
+    np.testing.assert_allclose(f(x, w), g(x, w), rtol=1e-4)
+    for a, b in zip(jax.grad(f, (0, 1))(x, w), jax.grad(g, (0, 1))(x, w)):
+        np.testing.assert_allclose(a, b, rtol=3e-4, atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# Grouped kernel vs pure-jnp oracle (kernels/ref.py) — all schedules
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("compact", [False, True])
+def test_grouped_masked_matmul_matches_oracle(compact):
+    from repro.kernels import ops as kops, ref as kref
+
+    rng = np.random.default_rng(11)
+    g, m, k, n = 3, 13, 9, 5
+    bm, bk, bn = 4, 8, 4
+    mp, kp, np_ = 16, 16, 8
+    a = jnp.asarray(rng.standard_normal((g, m, k)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((g, k, n)), jnp.float32)
+
+    def pad3(x, d1, d2):
+        return jnp.pad(x, ((0, 0), (0, d1 - x.shape[1]),
+                           (0, d2 - x.shape[2])))
+
+    om = jnp.asarray(rng.random((g, mp // bm, np_ // bn)) > 0.3, jnp.int32)
+    am = jnp.asarray(rng.random((g, mp // bm, kp // bk)) > 0.2, jnp.int32)
+    bmask = jnp.asarray(rng.random((g, kp // bk, np_ // bn)) > 0.2, jnp.int32)
+    mult = jnp.asarray(rng.random((g, m, n)) > 0.5, jnp.float32)
+
+    got = kops.grouped_masked_matmul(
+        a, b, om, am, bmask, block=(bm, bk, bn), compact=compact,
+        epilogue_mult=mult)
+    want = kref.grouped_masked_matmul(
+        pad3(a, mp, kp), pad3(b, kp, np_), om, am, bmask,
+        bm=bm, bk=bk, bn=bn,
+        epilogue_mult=pad3(mult, mp, np_))[:, :m, :n]
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_grouped_compact_bounded_queue_and_overflow():
+    """Exactly-live capacity stays exact; one-below-live triggers the
+    grouped predicated fallback — never a silent truncation."""
+    from repro.kernels import ops as kops, ref as kref
+
+    rng = np.random.default_rng(12)
+    g, m, k, n = 3, 16, 16, 8
+    bm, bk, bn = 4, 8, 4
+    a = jnp.asarray(rng.standard_normal((g, m, k)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((g, k, n)), jnp.float32)
+    om = jnp.asarray(rng.random((g, m // bm, n // bn)) > 0.4, jnp.int32)
+    want = kref.grouped_masked_matmul(a, b, om, None, None,
+                                      bm=bm, bk=bk, bn=bn)
+    n_live = int(np.asarray(om).sum())
+    for cap in (n_live, max(1, n_live - 2)):
+        got = kops.grouped_masked_matmul(
+            a, b, om, block=(bm, bk, bn), compact=True,
+            max_active_blocks=cap)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Contracts: group-boundary granularity + degenerate block shapes
+# ---------------------------------------------------------------------------
+
+def test_channel_granularity_respects_group_boundaries():
+    """A coarsened cell must never straddle two groups: gc | C//G."""
+    for block in [(8, 16, 8), (16, 16, 16), (128, 128, 128)]:
+        bm, bk, bn = block
+        for channels, groups in [(6, 2), (6, 6), (64, 64), (64, 4), (12, 3)]:
+            g = conv_channel_granularity(channels, block, groups)
+            per_group = channels // groups
+            assert per_group % g == 0, (channels, groups, block, g)
+            assert bm % g == 0 and bk % g == 0 and bn % g == 0
+    # depthwise degenerates to per-channel granularity
+    assert conv_channel_granularity(64, (128, 128, 128), 64) == 1
+
+
+def test_grouped_gemm_block_degenerates_for_tiny_dims():
+    """Depthwise K = R·S·1 = 9: the engine must pick a ~K-sized block, not
+    pad a 128-block that can never mask ("silently masking nothing")."""
+    p = pol.IN_OUT.with_(block=(128, 128, 128))
+    bm, bk, bn = grouped_gemm_block(p, (4096, 9, 1), (1, 1, 1))
+    assert bk == 9 and bn == 1 and bm == 128
+    # granularity keeps edges aligned: K gran 4 rounds the edge up
+    bm, bk, bn = grouped_gemm_block(p, (4096, 18, 8), (1, 4, 4))
+    assert bk % 4 == 0 and bk >= 18 and bk <= 20
+    assert bn == 8
+    # large per-group dims keep the nominal MXU tile
+    assert grouped_gemm_block(p, (4096, 1152, 256), (1, 1, 1)) \
+        == (128, 128, 128)
+    # explicit grouped_block override wins over `block`
+    p2 = p.with_(grouped_block=(32, 16, 16))
+    assert grouped_gemm_block(p2, (4096, 1152, 256), (1, 1, 1)) \
+        == (32, 16, 16)
+
+
+def test_grouped_sparsity_min_k_threshold():
+    """The policy knob drops operand masks below the per-group-K threshold
+    without changing results (masks are an optimization, not semantics)."""
+    c = 8
+    x = _rand((2, 8, 8, c), 9)
+    w = _rand((3, 3, 1, c), 10)
+    hi = PALLAS_U.with_(grouped_sparsity_min_k=1000)   # masks disabled
+    f_lo = lambda x, w: (depthwise_relu_conv(x, w, 1, "SAME",
+                                             PALLAS_U) ** 2).sum()
+    f_hi = lambda x, w: (depthwise_relu_conv(x, w, 1, "SAME", hi) ** 2).sum()
+    np.testing.assert_allclose(f_lo(x, w), f_hi(x, w), rtol=1e-5)
+    for a, b in zip(jax.grad(f_lo, (0, 1))(x, w),
+                    jax.grad(f_hi, (0, 1))(x, w)):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_mobilenet_smoke_no_dense_fallbacks():
+    """MobileNet's 13 dw layers route through the sparse engine: zero
+    ``conv:dense_fallback`` records in a full fwd+bwd step under the
+    default pallas policy — the ISSUE's acceptance criterion."""
+    from repro.data.pipeline import image_batch
+    from repro.models.cnn import build_cnn
+
+    model = build_cnn("mobilenet", image_size=8, width=0.0625, num_classes=10)
+    params = model.init(jax.random.key(0))
+    img, labels = image_batch(0, 0, batch=1, image_size=8, num_classes=10)
+    policy = pol.IN_OUT_WR.with_(kernel_impl="pallas", block=(8, 8, 8))
+    stats.reset()
+    grads = jax.grad(lambda p: model.loss(p, img, labels, policy))(params)
+    counts = stats.counts()
+    assert counts.get("conv:dense_fallback", 0) == 0, counts
+    for leaf in jax.tree.leaves(grads):
+        assert np.all(np.isfinite(np.asarray(leaf)))
+
+
+def test_depthwise_init_is_pure():
+    """The IR is never mutated: init → conv_specs → re-init agree in any
+    order (the seed wrote ``node.out_ch = in_ch`` during init, so a
+    conv_specs call before init disagreed with one after)."""
+    from repro.models.cnn import build_cnn
+
+    m1 = build_cnn("mobilenet", image_size=16, width=0.25, num_classes=10)
+    specs_before = [(s.name, s.c, s.m, s.groups) for s in m1.conv_specs(2)]
+    params = m1.init(jax.random.key(0))
+    specs_after = [(s.name, s.c, s.m, s.groups) for s in m1.conv_specs(2)]
+    assert specs_before == specs_after
+    for node_name, _, out_ch, _ in specs_before:
+        assert params[node_name]["w"].shape[3] == out_ch
+    # the IR itself still carries the unresolved sentinel
+    dw_nodes = [n for n in m1.layers
+                if getattr(n, "depthwise", False)]
+    assert dw_nodes and all(n.out_ch == 0 for n in dw_nodes)
+    # re-init from the same key is bit-identical (no state left behind)
+    params2 = m1.init(jax.random.key(0))
+    for k in params:
+        np.testing.assert_array_equal(params[k]["w"], params2[k]["w"])
