@@ -79,7 +79,8 @@ def kernel_audit() -> Tuple[List[dict], str]:
     first = next(iter(acts.values()))
     flat = (first.reshape(-1) != 0).astype(np.float32)
     relu_mask = jnp.asarray(np.resize(flat, (64, 32)))
-    got = ops.relu_bwd_masked(a, w, relu_mask, block=(16, 16, 16))
+    got = ops.relu_bwd_masked(a, w, relu_mask,
+                              spec=ops.GemmSpec(block=(16, 16, 16)))
     want = ref.relu_bwd_masked(a, w, relu_mask, bm=16, bk=16, bn=16)
     exact = bool(np.allclose(got, want, rtol=1e-5, atol=1e-5))
 
@@ -138,10 +139,15 @@ def queue_cost_audit() -> Tuple[List[dict], str]:
             ii, jj, nl = (np.asarray(o) for o in out)
             match = bool(int(nl[0]) == rn and np.array_equal(ii, ri)
                          and np.array_equal(jj, rj))
-            return us, match
+            # the normalized stats reader: every construction above must be
+            # attributed to THIS builder's queue:<builder> key, no other
+            builds = stats.queue_builds(builder)
+            assert builds == 4 and stats.queue_builds() == builds, \
+                stats.counts()
+            return us, match, builds
 
-        us_sort, m_sort = _timed("argsort")
-        us_pfx, m_pfx = _timed("prefix_sum")
+        us_sort, m_sort, n_sort = _timed("argsort")
+        us_pfx, m_pfx, n_pfx = _timed("prefix_sum")
         all_match &= m_sort and m_pfx
         rows.append({
             "tiles": t, "shape": f"{mb}x{nb}",
@@ -150,6 +156,7 @@ def queue_cost_audit() -> Tuple[List[dict], str]:
             "op_ratio": round(max(1, math.ceil(math.log2(t))), 2),
             "us_argsort": round(us_sort, 1),
             "us_prefix_sum": round(us_pfx, 1),
+            "counted_builds": n_sort + n_pfx,
             "match_reference": m_sort and m_pfx,
         })
     # A builder diverging from the reference order is a correctness bug,
@@ -179,12 +186,17 @@ def bitmap_op_audit() -> Tuple[List[dict], str]:
         gs = jax.grad(sparse_fn, argnums)(*args)
         n_act = stats.total("act")
         n_grad = stats.total("grad")
+        # the dispatcher's normalized gemm:<schedule>:<g> launch keys — on
+        # this policy every GEMM must dispatch compact, none dense/argsort
+        n_gemm = stats.gemm_launches()
+        n_compact = stats.gemm_launches(schedule="compact")
+        assert n_gemm == n_compact and n_gemm > 0, stats.counts()
         gd = jax.grad(dense_fn, argnums)(*args)
         exact = all(
             np.allclose(a, b, rtol=3e-4, atol=3e-4) for a, b in zip(gs, gd))
         rows.append({"path": label, "bitmap_ops_act": n_act,
                      "bitmap_ops_grad": n_grad, "seed_ops_act": 3,
-                     "exact_vs_dense": exact})
+                     "gemm_launches": n_gemm, "exact_vs_dense": exact})
         return n_act, exact
 
     x = jnp.asarray(rng.standard_normal((40, 24)), jnp.float32)
@@ -245,6 +257,97 @@ def bitmap_op_audit() -> Tuple[List[dict], str]:
         f"act_matmul_bitmaps_per_act={n_mm} relu_conv_bitmaps_per_act={n_cv} "
         f"depthwise_bitmaps_per_act={n_dw} (seed>=3) "
         f"exact={e_mm and e_cv and e_g2 and e_dw}")
+
+
+# ---------------------------------------------------------------------------
+# Launch-shape audit — the GemmSpec regression table.  The spec-driven
+# redesign lowers EVERY GEMM (2-D included, as G=1) onto the grouped
+# engine, which changes kernel launch shapes; this table pins the per-GEMM
+# grid / block / queue-capacity geometry BEFORE (the legacy split
+# orchestrators) vs AFTER (GemmSpec.launch_geometry) for a real model's
+# workload, so future spec changes can't silently regress launch geometry.
+# Uploaded as a CSV artifact by CI.
+# ---------------------------------------------------------------------------
+
+def _legacy_geometry(block, g, m, k, n, schedule, cap=None):
+    """Pre-redesign launch geometry: masked_matmul's 2-D grid (Mb, Nb, Kb)
+    and grouped_masked_matmul's (G, Mb, Nb, Kb); compact walked (cap, Kb)
+    with cap defaulting to all tiles.  Kept here as the frozen reference."""
+    bm, bk, bn = block
+    ni, nk, nj = -(-m // bm), -(-k // bk), -(-n // bn)
+    if schedule == "compact":
+        cap = g * ni * nj if cap is None else cap
+        return (cap, nk), cap
+    grid = (ni, nj, nk) if g == 1 else (g, ni, nj, nk)
+    return grid, 0
+
+
+def _engine_grans(stage: str, cin: int, cout: int, groups: int,
+                  block) -> Tuple[int, int, int]:
+    """The per-axis bitmap granularities ``_conv_engine_fwd/_bwd`` resolve
+    grouped specs with: gc = activation channel granularity, gcg = gradient
+    channel granularity (both from ``conv_channel_granularity`` on the FULL
+    channel counts).  Kept in the engine's exact stage order so the audit
+    pins the geometry the engine actually launches, not a gran-1 proxy."""
+    from repro.core.sparse_tensor import conv_channel_granularity
+
+    gc = conv_channel_granularity(cin, block, groups)
+    gcg = conv_channel_granularity(cout, block, groups)
+    return {"fp": (1, gc, 1),
+            "bp_dx": (1, gcg, gc),
+            "wg": (gc, 1, gcg)}[stage]
+
+
+def launch_shape_audit() -> Tuple[List[dict], str]:
+    from repro.core import policy as pol
+    from repro.models.cnn import build_cnn
+
+    policy = pol.IN_OUT_WR.with_(kernel_impl="pallas", block=(8, 8, 8))
+    model = build_cnn("mobilenet", image_size=8, width=0.25, num_classes=10)
+    workload = model.gemm_workload(batch=2)
+    # plus the linear head GEMM (G=1, nominal tiles)
+    workload.append({"layer": "head", "stage": "fp", "groups": 1,
+                     "m": 2, "k": workload[-1]["n"], "n": 10})
+
+    rows: List[dict] = []
+    all_ok = True
+    for w in workload:
+        g, m, k, n = w["groups"], w["m"], w["k"], w["n"]
+        # mirror the engine's resolution: nominal tiles at G=1 (the _mm
+        # funnel), degenerate grouped_gemm_block tiles at the engine's true
+        # channel granularities for grouped GEMMs
+        base = policy.gemm_spec(groups=g) if g == 1 else \
+            policy.gemm_spec(groups=g, dims=(m, k, n),
+                             grans=_engine_grans(w["stage"], w["cin"],
+                                                 w["cout"], g, policy.block))
+        for schedule in ("predicated", "compact"):
+            spec = base.with_(schedule=schedule)
+            geom = spec.launch_geometry(m, k, n)
+            legacy_grid, legacy_cap = _legacy_geometry(
+                spec.block, g, m, k, n, schedule)
+            if schedule == "compact":
+                # the one queue + its capacity must be unchanged by the
+                # collapse (same work stream, same overflow threshold)
+                ok = geom["grid"] == legacy_grid \
+                    and geom["queue_capacity"] == legacy_cap
+            else:
+                # G=1 grids gain exactly the leading unit group dim; true
+                # grouped grids are unchanged
+                want = (1, *legacy_grid) if g == 1 else legacy_grid
+                ok = geom["grid"] == want
+            all_ok &= ok
+            rows.append({
+                "layer": w["layer"], "stage": w["stage"], "schedule": schedule,
+                "groups": g, "m": m, "k": k, "n": n,
+                "block": "x".join(map(str, spec.block)),
+                "grid_before": "x".join(map(str, legacy_grid)),
+                "grid_after": "x".join(map(str, geom["grid"])),
+                "queue_cap_before": legacy_cap,
+                "queue_cap_after": geom["queue_capacity"],
+                "geometry_ok": ok,
+            })
+    assert all_ok, "sparse_gemm launch geometry regressed vs the legacy contract"
+    return rows, f"gemms={len(rows)} geometry_ok={all_ok}"
 
 
 # ---------------------------------------------------------------------------

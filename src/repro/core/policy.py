@@ -11,11 +11,22 @@ IN_OUT_WR   + work redistribution (paper's full system; on TPU this picks
   * "xla_ref" — numerically identical pure-jnp path (dense compute + mask)
                 so CPU-bound examples/training run at XLA speed while the
                 cost model still accounts the skipped work.
+
+``SparsityPolicy.gemm_spec(...)`` is the ONE policy→kernel resolution
+point: it maps a policy (plus per-GEMM dims/granularity) onto the frozen
+``kernels.ops.GemmSpec`` that ``sparse_gemm`` dispatches on, including the
+degenerate grouped tiles of ``grouped_gemm_block``.  No layer above
+kernels/ threads schedule/queue/epilogue kwargs by hand anymore.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Literal, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.kernels.ops import GemmSpec
+from repro.kernels.shapes import ceil_to
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,9 +76,46 @@ class SparsityPolicy:
     def with_(self, **kw) -> "SparsityPolicy":
         return dataclasses.replace(self, **kw)
 
+    def gemm_spec(
+        self,
+        *,
+        groups: int = 1,
+        dims: Optional[Tuple[int, int, int]] = None,
+        grans: Tuple[int, int, int] = (1, 1, 1),
+        out_dtype=jnp.float32,
+        fused_epilogue: bool = False,
+        max_active_blocks: Optional[int] = None,
+    ) -> GemmSpec:
+        """Policy → ``kernels.ops.GemmSpec`` resolution, in ONE place.
 
-def _ceil_to(v: int, b: int) -> int:
-    return -(-v // b) * b
+        ``dims``/``grans`` are the per-group (M, K, N) GEMM dims and the
+        bitmap granularity each axis requires: when given, the tile is the
+        degenerate ``grouped_gemm_block`` shape (each edge shrinks to the
+        granularity-rounded dim — works at any G, including G=1); when
+        None, the policy's nominal ``block``.  Schedule resolution:
+        ``kernel_impl != "pallas"`` ⇒ "dense" (masked dense compute),
+        ``work_redistribution`` ⇒ "compact", else "predicated".
+        ``fused_epilogue`` declares a σ′-Hadamard fused into the writeback
+        (callers pass the multiplier itself to ``sparse_gemm``).
+        """
+        block = grouped_gemm_block(self, dims, grans) \
+            if dims is not None else self.block
+        if self.kernel_impl != "pallas":
+            schedule = "dense"
+        elif self.work_redistribution:
+            schedule = "compact"
+        else:
+            schedule = "predicated"
+        return GemmSpec(
+            block=block,
+            groups=groups,
+            schedule=schedule,
+            epilogue="sigma_prime" if fused_epilogue else "none",
+            queue_builder=self.queue_builder,
+            max_active_blocks=max_active_blocks,
+            out_dtype=out_dtype,
+            interpret=self.interpret,
+        )
 
 
 def grouped_gemm_block(
@@ -88,8 +136,8 @@ def grouped_gemm_block(
     nominal = policy.grouped_block or policy.block
     out = []
     for b, d, g in zip(nominal, dims, grans):
-        e = min(b, _ceil_to(d, g))
-        e = max(g, _ceil_to(e, g))    # keep a multiple of the granularity
+        e = min(b, ceil_to(d, g))
+        e = max(g, ceil_to(e, g))    # keep a multiple of the granularity
         out.append(e)
     return tuple(out)
 

@@ -42,10 +42,13 @@ other mask is then *derived* from it without rescanning tensor-sized data:
 Grouped convs reuse the SAME derivations: the channel granularity divides
 C//G (see ``conv_channel_granularity``), so per-group masks are pure
 reshapes of the one bitmap's columns — group g's slice of the im2col'd
-bitmap IS the bitmap of group g's im2col'd data.  Per-group GEMM tiles are
-chosen by ``policy.grouped_gemm_block``: depthwise K-dims are tiny (R·S·1),
-so edges degenerate to the granularity-rounded dims instead of padding a
-128-block that could never mask anything.
+bitmap IS the bitmap of group g's im2col'd data.  Per-group GEMM tiles
+come from ``policy.gemm_spec(dims=..., grans=...)`` (the
+``grouped_gemm_block`` degenerate-tile rule): depthwise K-dims are tiny
+(R·S·1), so edges degenerate to the granularity-rounded dims instead of
+padding a 128-block that could never mask anything.  Every stage's GEMM —
+dense or grouped — is one ``kernels.ops.sparse_gemm`` dispatch on that
+spec (see docs/gemm_api.md).
 
 Exactness vs dense autodiff is asserted in tests for stride ∈ {1, 2},
 padding ∈ {SAME, VALID} and groups ∈ {1, 2, C}; threaded-vs-rescanned mask
@@ -60,10 +63,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops as kops
-from .policy import SparsityPolicy, grouped_gemm_block
-from .sparse_linear import (
-    _bitmap_padded, _mm, _needs_act_bitmap, _needs_grad_bitmap,
-)
+from repro.kernels.shapes import block_bitmap as _bitmap_padded
+from .policy import SparsityPolicy
+from .sparse_linear import _mm, _needs_act_bitmap, _needs_grad_bitmap
 from .sparse_tensor import (
     SparseTensor, coarsen_bitmap, conv_channel_granularity, scan_bitmap,
 )
@@ -276,14 +278,16 @@ def _conv_engine_fwd(x_in, w, stride, padding, policy: SparsityPolicy,
     else:
         cg, mg = c // groups, m // groups
         gc = st.gran[1] if st.gran else 1
-        blk = grouped_gemm_block(policy, (t, r * s * cg, mg), (1, gc, 1))
+        spec = policy.gemm_spec(groups=groups, dims=(t, r * s * cg, mg),
+                                grans=(1, gc, 1))
+        blk = spec.block
         a_mask = None
         if want_a_mask and r * s * cg >= policy.grouped_sparsity_min_k:
             pb = _patch_bitmap(st, (n, h, wd, c), r, s, stride, pad4)
             pbg = _group_patches(pb.bitmap, r * s, groups)
             a_mask = coarsen_bitmap(pbg, (1, gc), (blk[0], blk[1]))
         yg = _mm(_group_patches(pm, r * s, groups), _group_weights(w, groups),
-                 None, a_mask, None, policy, x_in.dtype, block=blk)
+                 None, a_mask, None, policy, x_in.dtype, spec=spec)
         y = _ungroup_cols(yg)
     return y.reshape(n, u, v, m), (st, w)
 
@@ -352,8 +356,10 @@ def _conv_engine_bwd(stride, padding, policy: SparsityPolicy,
                  out_dtype, epilogue=mask2d)
         dx = dx.reshape(n, h, wd, c)
     else:
-        blk = grouped_gemm_block(policy, (n * h * wd, r * s * mg, cg),
-                                 (1, gcg, gc))
+        spec = policy.gemm_spec(groups=groups,
+                                dims=(n * h * wd, r * s * mg, cg),
+                                grans=(1, gcg, gc))
+        blk = spec.block
         out_mask = None
         if use_out:
             out_mask = coarsen_bitmap(_group_cols(st.bitmap, groups),
@@ -366,7 +372,7 @@ def _conv_engine_bwd(stride, padding, policy: SparsityPolicy,
         dxg = _mm(_group_patches(gm2, r * s, groups),
                   _group_weights_bwd(w, groups).astype(jnp.float32),
                   out_mask, g_mask, None, policy, out_dtype,
-                  epilogue=epi, block=blk)
+                  epilogue=epi, spec=spec)
         dx = _ungroup_cols(dxg).reshape(n, h, wd, c)
 
     # ---- dW = patches(x)ᵀ @ dy — WG stage, input sparsity both sides ----
@@ -385,7 +391,9 @@ def _conv_engine_bwd(stride, padding, policy: SparsityPolicy,
         dw = _mm(pm.T, dym, None, pt_mask, dym_mask, policy, jnp.float32)
         dw = dw.reshape(r, s, c, m)
     else:
-        blk = grouped_gemm_block(policy, (r * s * cg, t, mg), (gc, 1, gcg))
+        spec = policy.gemm_spec(groups=groups, dims=(r * s * cg, t, mg),
+                                grans=(gc, 1, gcg))
+        blk = spec.block
         pt_mask = None
         if want_pt_mask:
             pb = _patch_bitmap(st, (n, h, wd, c), r, s, stride, pad4)
@@ -398,7 +406,7 @@ def _conv_engine_bwd(stride, padding, policy: SparsityPolicy,
                                       (1, gcg), (blk[1], blk[2]))
         dwg = _mm(_group_patches(pm, r * s, groups).transpose(0, 2, 1),
                   _group_cols(dym, groups), None, pt_mask, dym_mask, policy,
-                  jnp.float32, block=blk)
+                  jnp.float32, spec=spec)
         # (G, R·S·C//G, M//G) -> (R, S, C//G, M) group-major output channels
         dw = dwg.transpose(1, 0, 2).reshape(r, s, cg, m)
     return dx, dw.astype(w.dtype)

@@ -34,7 +34,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops as kops
-from repro.kernels import ref as kref
+from repro.kernels.ops import GemmMasks, GemmSpec
+# The freshly-computed dense-scan ORACLE the threaded bitmaps are
+# property-tested against — now lives in kernels.shapes (re-exported under
+# the established name).
+from repro.kernels.shapes import block_bitmap as _bitmap_padded  # noqa: F401
 from .policy import SparsityPolicy
 from .sparse_tensor import (
     SparseTensor,
@@ -44,74 +48,38 @@ from .sparse_tensor import (
 )
 
 
-def _bitmap_padded(x2d: jnp.ndarray, b0: int, b1: int) -> jnp.ndarray:
-    """Freshly-computed dense-scan bitmap — the ORACLE the threaded bitmaps
-    are property-tested against.  Not on the hot path anymore."""
-    m, n = x2d.shape
-    mp = (m + b0 - 1) // b0 * b0
-    np_ = (n + b1 - 1) // b1 * b1
-    if mp != m or np_ != n:
-        x2d = jnp.pad(x2d, ((0, mp - m), (0, np_ - n)))
-    return kref.block_any_nonzero(x2d, b0, b1)
-
-
 def _mm(a, b, out_mask, a_mask, b_mask, policy: SparsityPolicy, out_dtype,
         epilogue: Optional[jnp.ndarray] = None,
-        block: Optional[Tuple[int, int, int]] = None):
-    """Dispatch a masked matmul through the policy's kernel impl.
+        spec: Optional[GemmSpec] = None):
+    """Route one masked matmul through the ``kernels.ops.sparse_gemm``
+    dispatcher, resolving the policy to a ``GemmSpec`` (unless the caller
+    already resolved one — the conv engine passes specs carrying degenerate
+    per-group tiles).
 
     ``epilogue`` is an (M, N) Hadamard multiplier fused into the kernel's
-    accumulator writeback (policy.fuse_epilogue) or applied as a separate
-    elementwise pass (ablation / xla_ref equivalence).
+    accumulator writeback (``policy.fuse_epilogue``) or applied as a
+    separate elementwise pass (ablation; the "dense" schedule folds it in
+    either way — numerics are identical).
 
-    3-D operands (leading group axis: (G, M, K) @ (G, K, N)) dispatch to
-    the grouped kernels — the GEMM form of grouped/depthwise convs, with
-    per-group masks and the same epilogue/compact-queue semantics.
-    ``block`` overrides ``policy.block`` (the conv engine passes degenerate
-    per-GEMM tiles for tiny per-group dims)."""
-    blk = block or policy.block
-    grouped = a.ndim == 3
-    if policy.kernel_impl == "pallas":
-        mmfn = kops.grouped_masked_matmul if grouped else kops.masked_matmul
-        if epilogue is not None and not policy.fuse_epilogue:
-            out = mmfn(
-                a, b, out_mask=out_mask, a_mask=a_mask, b_mask=b_mask,
-                block=blk, out_dtype=jnp.float32,
-                compact=policy.work_redistribution,
-                queue_builder=policy.queue_builder, interpret=policy.interpret,
-            )
-            return (out * epilogue.astype(jnp.float32)).astype(out_dtype)
-        return mmfn(
-            a, b, out_mask=out_mask, a_mask=a_mask, b_mask=b_mask,
-            block=blk, out_dtype=out_dtype,
-            compact=policy.work_redistribution,
-            queue_builder=policy.queue_builder,
-            epilogue_mult=epilogue, interpret=policy.interpret,
-        )
-    # xla_ref: numerically-equivalent dense compute + masking.  The skipped
-    # work is accounted by core.costmodel, not saved on this backend.
-    if grouped:
-        out = jnp.einsum("gmk,gkn->gmn", a.astype(jnp.float32),
-                         b.astype(jnp.float32))
-        if out_mask is not None:
-            bm, _, bn = blk
-            _, m, n = out.shape
-            em = jax.vmap(lambda mk: kref.expand_block_mask(mk, bm, bn))(
-                out_mask.astype(jnp.float32))
-            out = out * em[:, :m, :n]
-        if epilogue is not None:
-            out = out * epilogue.astype(jnp.float32)
-        return out.astype(out_dtype)
-    out = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
-                  preferred_element_type=jnp.float32)
-    if out_mask is not None:
-        bm, _, bn = blk
-        m, n = out.shape
-        em = kref.expand_block_mask(out_mask.astype(jnp.float32), bm, bn)
-        out = out * em[:m, :n]
-    if epilogue is not None:
-        out = out * epilogue.astype(jnp.float32)
-    return out.astype(out_dtype)
+    3-D operands (leading group axis: (G, M, K) @ (G, K, N)) dispatch as a
+    grouped spec — the GEMM form of grouped/depthwise convs, with
+    per-group masks and the same epilogue/compact-queue semantics."""
+    groups = a.shape[0] if a.ndim == 3 else 1
+    if spec is None:
+        spec = policy.gemm_spec(groups=groups)
+    masks = GemmMasks(out_mask, a_mask, b_mask)
+    # σ′ ablation: unfused epilogue runs as a separate VPU pass after an
+    # f32 GEMM (only meaningful for real kernel launches; the dense
+    # schedule has no writeback to fuse into).
+    if epilogue is not None and spec.schedule != "dense" \
+            and not policy.fuse_epilogue:
+        out = kops.sparse_gemm(
+            a, b, masks, spec.with_(epilogue="none", out_dtype=jnp.float32))
+        return (out * epilogue.astype(jnp.float32)).astype(out_dtype)
+    spec = spec.with_(
+        epilogue="sigma_prime" if epilogue is not None else "none",
+        out_dtype=out_dtype)
+    return kops.sparse_gemm(a, b, masks, spec, epilogue_mult=epilogue)
 
 
 def _needs_act_bitmap(policy: SparsityPolicy) -> bool:

@@ -1,15 +1,19 @@
 """Pallas TPU kernels for the gradient-output-sparsity technique.
 
 Layout (per kernel): <name>.py — pl.pallas_call + BlockSpec tiling;
-ops.py — jit'd public wrappers; ref.py — pure-jnp oracles.
+ops.py — the spec-driven ``sparse_gemm`` dispatcher + jit'd public
+wrappers; shapes.py — shared pad/tile helpers; ref.py — pure-jnp oracles.
 """
-from . import ops, queue_builder, ref, stats  # noqa: F401
+from . import ops, queue_builder, ref, shapes, stats  # noqa: F401
 from .ops import (  # noqa: F401
+    GemmMasks,
+    GemmSpec,
     bitmap_scan,
     build_queue,
     grouped_masked_matmul,
     masked_matmul,
     relu_bwd_masked,
     relu_encode,
+    sparse_gemm,
     weight_grad_masked,
 )

@@ -16,22 +16,30 @@ TPU-native unit of skipping is an MXU block, so both sparsity types become
 
 Two schedules are provided:
 
-  * ``masked_matmul_kernel`` — *predicated*: full (Mb, Nb, Kb) grid, each
-    step guards its MXU issue and its accumulator write with ``pl.when``.
-    This mirrors the paper's baseline sparse PE (lanes idle on skipped
-    work → load imbalance across tiles).
+  * *predicated* (``grouped_masked_matmul_kernel``): full (G, Mb, Nb, Kb)
+    grid, each step guards its MXU issue and its accumulator write with
+    ``pl.when``.  This mirrors the paper's baseline sparse PE (lanes idle
+    on skipped work → load imbalance across tiles).
 
-  * ``compact_masked_matmul_kernel`` — *compacted* ("work redistribution"):
-    the grid walks a scalar-prefetched queue of ACTIVE (i, j) block
-    coordinates only, so work per sequential grid step is uniform by
-    construction.  This is the TPU analogue of the paper's WDU (§4.6): the
-    WDU rebalances remaining work at runtime; here the work-queue is
-    compacted before launch, which achieves the same ideal occupancy bound
-    the WDU approaches (its ~83% vs the queue's 100% of active blocks).
+  * *compacted* ("work redistribution",
+    ``grouped_compact_masked_matmul_kernel``): the grid walks a scalar-
+    prefetched queue of ACTIVE (g, i, j) block coordinates only, so work
+    per sequential grid step is uniform by construction.  This is the TPU
+    analogue of the paper's WDU (§4.6): the WDU rebalances remaining work
+    at runtime; here the work-queue is compacted before launch, which
+    achieves the same ideal occupancy bound the WDU approaches (its ~83%
+    vs the queue's 100% of active blocks).
 
-Both kernels accumulate in a f32 VMEM scratch across the K grid dimension
+All kernels accumulate in a f32 VMEM scratch across the K grid dimension
 and are exact: a skipped output tile is exactly the zero tile the dense
 computation would have produced post-Hadamard.
+
+Since the spec-driven redesign (docs/gemm_api.md), ``kernels.ops.
+sparse_gemm`` launches ONLY the grouped kernels — a 2-D GEMM is the G=1
+special case.  The 2-D kernels (``masked_matmul_kernel``,
+``compact_masked_matmul_kernel``) are RETAINED as the pre-redesign
+reference: tests/test_gemm_spec.py pins sparse_gemm(G=1) bit-exact against
+them, the same role the argsort queue builder plays for the prefix-sum one.
 """
 from __future__ import annotations
 
@@ -49,7 +57,7 @@ except ImportError:  # pragma: no cover
 
 
 # ---------------------------------------------------------------------------
-# Predicated kernel
+# Predicated kernel (2-D; retained pre-redesign reference — see module doc)
 # ---------------------------------------------------------------------------
 
 def _mm_kernel(out_m_ref, a_m_ref, b_m_ref, a_ref, b_ref, o_ref, acc_ref):
@@ -427,7 +435,8 @@ def grouped_compact_masked_matmul_kernel(
 
 
 # ---------------------------------------------------------------------------
-# Compacted (work-redistribution) kernel
+# Compacted (work-redistribution) kernel (2-D; retained pre-redesign
+# reference — see module doc)
 # ---------------------------------------------------------------------------
 
 def _mm_compact_kernel(

@@ -1,58 +1,67 @@
 """Public, jit-friendly wrappers around the Pallas kernels.
 
+THE masked-GEMM entry point is ``sparse_gemm(a, b, masks, spec)``:
+
+  * ``GemmSpec`` is a frozen, hashable request object — tile shape, group
+    count, schedule ∈ {predicated, compact, dense}, epilogue ∈ {none,
+    sigma_prime}, queue builder, queue capacity, output dtype.  It is
+    static metadata: shardable, cacheable, and printable, where the old
+    API threaded seven loose kwargs through every layer.
+  * ``GemmMasks`` carries the (out, a, b) block bitmaps; ``None`` on any
+    slot means dense on that axis pair.
+  * The dispatcher owns the pad / queue / overflow-fallback / scatter
+    contract in EXACTLY ONE place: 2-D operands are lowered as the G=1
+    special case of the grouped engine, so every GEMM in the system —
+    linear, conv im2col, grouped/depthwise, WG — shares one tuned
+    implementation (the SparseTrain/TensorDash "single uniform sparse
+    dataflow" lesson).
+
 Handles:
   * automatic interpret-mode selection (CPU backend → interpret=True, so the
     whole framework is testable in this container while targeting TPU),
   * block-alignment padding (MXU-aligned defaults bm=bk=bn=128; padded
     blocks are marked inactive so they are skipped, not computed),
-  * host-side bitmap derivation from dense operands / ReLU masks,
   * the compact (work-redistribution) launch path, including the active-
-    coordinate queue construction and the scatter back to dense layout.
+    coordinate queue construction and the scatter back to dense layout,
+  * a ``schedule="dense"`` lowering (dense compute + output masking) that
+    is numerically identical to the kernels — the xla_ref policy path.
+
+``masked_matmul`` / ``grouped_masked_matmul`` remain as thin deprecation
+shims over ``sparse_gemm`` (warn once; see docs/gemm_api.md).  Every
+dispatch is counted by ``kernels.stats`` under ``gemm:<schedule>:<g>``.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+import dataclasses
+import warnings
+from typing import Any, NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
+from . import queue_builder as _queue_builder
 from . import ref, stats
 from .bitmap_scan import bitmap_scan_kernel
 from .masked_matmul import (
-    compact_masked_matmul_kernel,
     grouped_compact_masked_matmul_kernel,
     grouped_masked_matmul_kernel,
-    masked_matmul_kernel,
 )
-from .queue_builder import build_queue_kernel
 from .relu_encode import relu_encode_kernel
+from .shapes import (
+    block_bitmap, ceil_to, grid_shape, pad3, pad_mask3, pad_to,
+)
 
 # MXU-native tile. Tests sweep smaller tiles in interpret mode.
 DEFAULT_BLOCK = (128, 128, 128)
 
-def _parse_version(v: str):
-    """Leading-digit parse per component: '0.4.27rc1' → (0, 4, 27); any
-    unparseable component compares as 0 (never an import-time crash)."""
-    import re
-    out = []
-    for part in v.split(".")[:3]:
-        m = re.match(r"\d+", part)
-        out.append(int(m.group()) if m else 0)
-    return tuple(out)
+SCHEDULES = ("predicated", "compact", "dense")
+EPILOGUES = ("none", "sigma_prime")
 
 
-_JAX_VERSION = _parse_version(jax.__version__)
-
-
-def _stable_argsort_desc(flat: jnp.ndarray) -> jnp.ndarray:
-    """Stable descending argsort of a {0,1} vector (active indices first,
-    row-major within each class) — the retained O(T log T) queue-builder
-    reference.  ``stable=`` only exists from jax 0.4.27; earlier releases
-    sort stably by default, so the kwarg is version-gated, not assumed."""
-    if _JAX_VERSION >= (0, 4, 27):
-        return jnp.argsort(-flat, stable=True)
-    return jnp.argsort(-flat)  # pre-0.4.27 argsort is stable by default
+def _use_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
 
 
 def build_queue(
@@ -62,63 +71,273 @@ def build_queue(
     builder: str = "prefix_sum",
     interpret: Optional[bool] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Active-tile queue ``(ii, jj, n_live)`` from a (Mb, Nb) tile bitmap.
+    """Active-tile queue from a tile bitmap — re-export of
+    ``kernels.queue_builder.build_queue`` with auto interpret resolution
+    (the builder dispatch itself lives next to the prefix-sum kernel)."""
+    return _queue_builder.build_queue(
+        bitmap, capacity=capacity, builder=builder,
+        interpret=_use_interpret(interpret))
 
-    Queue order is the WDU's "lexicographically smallest state tuple first"
-    — row-major (i, j); ``core.workredist.static_queue_order`` is the
-    reference.  ``n_live`` (1,) is the TRUE set-bit count (may exceed
-    ``capacity``; slots past it are zero-padded).
 
-    builder="prefix_sum" (default): Pallas blockwise exclusive-prefix-sum
-    stream compaction — O(T), no sort on the critical path.
-    builder="argsort": the seed's O(T log T) sort, kept as the reference
-    and fallback.  Each construction is counted by ``stats`` as
-    ``queue:<builder>``.
+# ---------------------------------------------------------------------------
+# The request objects
+# ---------------------------------------------------------------------------
+
+class GemmMasks(NamedTuple):
+    """Block bitmaps for one GEMM; ``None`` ⇒ dense on that axis pair.
+
+    2-D request (G=1): out (Mb, Nb), a (Mb, Kb), b (Kb, Nb).
+    Grouped request:   each mask carries a leading G axis.
     """
-    mb, nb = bitmap.shape
-    stats.record(f"queue:{builder}")
-    if builder == "argsort":
-        flat = bitmap.reshape(-1)
-        order = _stable_argsort_desc(flat)[:capacity]
-        if order.shape[0] < capacity:           # capacity may exceed T
-            order = jnp.pad(order, (0, capacity - order.shape[0]))
-        ii = (order // nb).astype(jnp.int32)
-        jj = (order % nb).astype(jnp.int32)
-        # Dead slots must carry valid (in-range) coords for the consumer's
-        # gathers; zero them like the prefix-sum builder does.
-        live = jnp.arange(capacity) < flat.sum()
-        ii = jnp.where(live, ii, 0)
-        jj = jnp.where(live, jj, 0)
-        return ii, jj, flat.sum().reshape(1)
-    if builder != "prefix_sum":
-        raise ValueError(f"unknown queue builder: {builder!r}")
-    return build_queue_kernel(bitmap, capacity=capacity,
-                              interpret=_use_interpret(interpret))
+    out: Optional[jnp.ndarray] = None
+    a: Optional[jnp.ndarray] = None
+    b: Optional[jnp.ndarray] = None
 
 
-def _use_interpret(interpret: Optional[bool]) -> bool:
-    if interpret is not None:
-        return interpret
-    return jax.default_backend() != "tpu"
+@dataclasses.dataclass(frozen=True)
+class GemmSpec:
+    """One masked GEMM, fully described as static metadata.
+
+    schedule:
+      * "predicated" — full (G, Mb, Nb, Kb) grid; each step guards its MXU
+        issue on the masks (the paper's baseline sparse PE).
+      * "compact"    — work-redistribution: ONE queue of active (g, i, j)
+        tiles spanning all groups (lexicographic WDU order), built by
+        ``queue_builder``; overflow beyond ``max_active_blocks`` falls back
+        to the predicated schedule at runtime — never a silent truncation.
+      * "dense"      — no Pallas launch: dense compute + output-mask +
+        epilogue, numerically identical (the xla_ref policy path; operand
+        masks are accounted by the cost model, not consumed).
+
+    epilogue ∈ {"none", "sigma_prime"}: whether the call fuses an (M, N)
+    Hadamard multiplier into the accumulator writeback (the backward σ′
+    multiply).  The multiplier itself is DATA and is passed to
+    ``sparse_gemm(..., epilogue_mult=)``; the spec only declares the shape
+    of the launch, so it stays hashable/static.
+
+    max_active_blocks: compact-queue capacity (None → all tiles, which
+    provably cannot overflow).  interpret: None → auto (CPU ⇒ True).
+    """
+    block: Tuple[int, int, int] = DEFAULT_BLOCK
+    groups: int = 1
+    schedule: str = "predicated"
+    epilogue: str = "none"
+    queue_builder: str = "prefix_sum"
+    max_active_blocks: Optional[int] = None
+    out_dtype: Any = jnp.float32
+    interpret: Optional[bool] = None
+
+    def __post_init__(self):
+        if self.schedule not in SCHEDULES:
+            raise ValueError(
+                f"schedule must be one of {SCHEDULES}, got {self.schedule!r}")
+        if self.epilogue not in EPILOGUES:
+            raise ValueError(
+                f"epilogue must be one of {EPILOGUES}, got {self.epilogue!r}")
+        if self.groups < 1:
+            raise ValueError(f"groups must be >= 1, got {self.groups}")
+        if len(self.block) != 3 or any(e < 1 for e in self.block):
+            raise ValueError(f"block must be 3 positive edges: {self.block}")
+
+    def with_(self, **kw) -> "GemmSpec":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def stats_key(self) -> str:
+        """The normalized per-launch counter key: ``gemm:<schedule>:<g>``."""
+        return f"gemm:{self.schedule}:{self.groups}"
+
+    def launch_geometry(self, m: int, k: int, n: int) -> dict:
+        """Static launch geometry this spec resolves to for per-group dims
+        (M, K, N) — the single source of truth the dispatcher pads/launches
+        by, and what ``benchmarks/kernel_audit.launch_shape_audit`` pins so
+        future spec changes can't silently regress launch shapes."""
+        bm, bk, bn = self.block
+        ni, nk, nj = grid_shape((m, k, n), self.block)
+        g = self.groups
+        geom = {
+            "schedule": self.schedule,
+            "groups": g,
+            "block": (bm, bk, bn),
+            "padded": (g, ni * bm, nk * bk, nj * bn),
+            "queue_capacity": 0,
+            "grid": (),
+        }
+        if self.schedule == "dense":
+            return geom
+        predicated_grid = (g, ni, nj, nk)
+        if self.schedule == "compact":
+            cap = self.max_active_blocks
+            geom["queue_capacity"] = g * ni * nj if cap is None else cap
+            geom["grid"] = (geom["queue_capacity"], nk)
+            geom["fallback_grid"] = predicated_grid
+        else:
+            geom["grid"] = predicated_grid
+        return geom
 
 
-def _pad_to(x: jnp.ndarray, m: int, n: int) -> jnp.ndarray:
-    pm, pn = m - x.shape[0], n - x.shape[1]
-    if pm == 0 and pn == 0:
-        return x
-    return jnp.pad(x, ((0, pm), (0, pn)))
+MasksLike = Union[GemmMasks, Sequence[Optional[jnp.ndarray]], None]
 
 
-def _ceil_to(v: int, b: int) -> int:
-    return (v + b - 1) // b * b
+def _as_masks(masks: MasksLike) -> GemmMasks:
+    if masks is None:
+        return GemmMasks()
+    if isinstance(masks, GemmMasks):
+        return masks
+    return GemmMasks(*masks)
 
 
-def _block_bitmap(x: jnp.ndarray, bm: int, bn: int) -> jnp.ndarray:
-    return ref.block_any_nonzero(x, bm, bn)
+# ---------------------------------------------------------------------------
+# The dispatcher — the ONE pad/queue/overflow-fallback/scatter implementation
+# ---------------------------------------------------------------------------
+
+def sparse_gemm(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    masks: MasksLike = None,
+    spec: Optional[GemmSpec] = None,
+    *,
+    epilogue_mult: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Block-sparse GEMM with output/input sparsity skipping — the single
+    entry point for every masked GEMM in the system.
+
+    2-D request: ``a`` (M, K) @ ``b`` (K, N) with ``spec.groups == 1`` —
+    lowered as the G=1 special case of the grouped engine.
+    Grouped request: ``a`` (G, M, K) @ ``b`` (G, K, N) batched per group
+    (``spec.groups == G``); masks carry a leading G axis and groups never
+    mix (the group-boundary contract).
+
+    Result equals the dense product masked by ``expand(masks.out)`` (and
+    Hadamard-multiplied by ``epilogue_mult`` when ``spec.epilogue ==
+    "sigma_prime"``) exactly — skipping is lossless by construction.
+    """
+    spec = GemmSpec() if spec is None else spec
+    masks = _as_masks(masks)
+    if (epilogue_mult is not None) != (spec.epilogue == "sigma_prime"):
+        raise ValueError(
+            f"spec.epilogue={spec.epilogue!r} but epilogue_mult "
+            f"{'is' if epilogue_mult is not None else 'is not'} provided")
+    grouped_in = a.ndim == 3
+    if not grouped_in:
+        if spec.groups != 1:
+            raise ValueError(
+                f"2-D operands require spec.groups == 1, got {spec.groups}")
+        a3, b3 = a[None], b[None]
+        masks = GemmMasks(*(m if m is None else m[None] for m in masks))
+        mult3 = None if epilogue_mult is None else epilogue_mult[None]
+    else:
+        if a.shape[0] != spec.groups:
+            raise ValueError(
+                f"operand group axis {a.shape[0]} != spec.groups "
+                f"{spec.groups}")
+        a3, b3, mult3 = a, b, epilogue_mult
+    stats.record(spec.stats_key)
+    out = _dispatch(a3, b3, masks, spec, mult3)
+    return out[0] if not grouped_in else out
 
 
-def _ones_bitmap(nb0: int, nb1: int) -> jnp.ndarray:
-    return jnp.ones((nb0, nb1), jnp.int32)
+def _dispatch(a, b, masks: GemmMasks, spec: GemmSpec, mult):
+    """Pad → (queue →) launch → (scatter →) unpad.  Exists exactly once."""
+    g, m, k = a.shape
+    g2, k2, n = b.shape
+    assert g == g2 == spec.groups and k == k2, (a.shape, b.shape, spec)
+    bm, bk, bn = spec.block
+    out_dtype = spec.out_dtype
+    if mult is not None:
+        assert mult.shape == (g, m, n), (mult.shape, (g, m, n))
+
+    if spec.schedule == "dense":
+        # Numerically-equivalent dense compute + masking: the skipped work
+        # is accounted by core.costmodel, not saved on this backend.
+        # Operand masks are metadata-only here (they feed the cost model).
+        out = jnp.einsum("gmk,gkn->gmn", a.astype(jnp.float32),
+                         b.astype(jnp.float32))
+        if masks.out is not None:
+            em = jax.vmap(lambda mk: ref.expand_block_mask(mk, bm, bn))(
+                masks.out.astype(jnp.float32))
+            out = out * em[:, :m, :n]
+        if mult is not None:
+            out = out * mult.astype(jnp.float32)
+        return out.astype(out_dtype)
+
+    ni, nk, nj = grid_shape((m, k, n), spec.block)
+    mp, kp, np_ = ni * bm, nk * bk, nj * bn
+    a_p = pad3(a, mp, kp)
+    b_p = pad3(b, kp, np_)
+    mult_p = None if mult is None else pad3(mult.astype(jnp.float32), mp, np_)
+    om = pad_mask3(masks.out, g, ni, nj)
+    am = pad_mask3(masks.a, g, ni, nk)
+    bmask = pad_mask3(masks.b, g, nk, nj)
+    itp = _use_interpret(spec.interpret)
+
+    def _predicated():
+        return grouped_masked_matmul_kernel(
+            a_p, b_p, om, am, bmask,
+            bm=bm, bk=bk, bn=bn, out_dtype=out_dtype,
+            epilogue_mult=mult_p, interpret=itp,
+        )
+
+    if spec.schedule == "compact":
+        s_cap = spec.max_active_blocks \
+            if spec.max_active_blocks is not None else g * ni * nj
+        # One queue over all groups: flatten (G, Mb, Nb) to (G·Mb, Nb) so
+        # the row-major builder order IS lexicographic (g, i, j) — the WDU
+        # dispatch order lifted to the group axis; decode the group
+        # coordinate back out of the fused row index.
+        fi, jj, n_live_v = build_queue(
+            om.reshape(g * ni, nj), capacity=s_cap,
+            builder=spec.queue_builder, interpret=itp)
+        gg = fi // ni
+        ii = fi % ni
+        n_live = n_live_v[0]
+        n_active = jnp.minimum(n_live, s_cap).reshape(1)
+
+        def _compact():
+            compacted = grouped_compact_masked_matmul_kernel(
+                a_p, b_p, gg, ii, jj, n_active, am, bmask,
+                bm=bm, bk=bk, bn=bn, out_dtype=out_dtype,
+                epilogue_mult=mult_p, interpret=itp,
+            )
+            # Scatter the queue back to dense tile layout.  Padding steps
+            # carry zero tiles at coords of dead queue slots — we direct
+            # dead slots at (0, 0, 0) via scatter-ADD so they are no-ops.
+            live = (jnp.arange(s_cap) < n_active[0]).astype(out_dtype)
+            masked = compacted * live[:, None, None]
+            sg = jnp.where(jnp.arange(s_cap) < n_active[0], gg, 0)
+            si = jnp.where(jnp.arange(s_cap) < n_active[0], ii, 0)
+            sj = jnp.where(jnp.arange(s_cap) < n_active[0], jj, 0)
+            out_tiles = jnp.zeros((g, ni, nj, bm, bn), out_dtype)
+            out_tiles = out_tiles.at[sg, si, sj].add(masked)
+            return out_tiles.transpose(0, 1, 3, 2, 4).reshape(g, mp, np_)
+
+        if s_cap >= g * ni * nj:
+            out = _compact()          # queue provably cannot overflow
+        else:
+            # Queue-capacity overflow would silently drop live tiles.  The
+            # live count is a traced value, so detect at runtime and fall
+            # back to the predicated (full-grid) schedule — exact always.
+            out = jax.lax.cond(n_live > s_cap, _predicated, _compact)
+    else:
+        out = _predicated()
+    return out[:, :m, :n]
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims — the pre-redesign orchestrators, kwarg-for-kwarg
+# ---------------------------------------------------------------------------
+
+_DEPRECATION_WARNED: set = set()
+
+
+def _warn_deprecated(name: str) -> None:
+    if name in _DEPRECATION_WARNED:
+        return
+    _DEPRECATION_WARNED.add(name)
+    warnings.warn(
+        f"kernels.ops.{name} is deprecated; build a GemmSpec and call "
+        f"sparse_gemm(a, b, masks, spec) instead (see docs/gemm_api.md)",
+        DeprecationWarning, stacklevel=3)
 
 
 def masked_matmul(
@@ -136,96 +355,20 @@ def masked_matmul(
     epilogue_mult: Optional[jnp.ndarray] = None,
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
-    """Block-sparse ``a @ b`` with output/input sparsity skipping.
+    """DEPRECATED: 2-D masked GEMM — now the G=1 lowering of ``sparse_gemm``.
 
-    Masks are block bitmaps (see kernels docstring); ``None`` means dense on
-    that axis pair.  Result equals ``(a @ b) * expand(out_mask)`` exactly.
-
-    ``compact=True`` routes through the work-redistribution schedule: the
-    grid walks only active output tiles (queue capacity
-    ``max_active_blocks``, default = all tiles).  If more tiles are live
-    than the queue holds, the call falls back to the predicated schedule —
-    never a silent truncation.  ``queue_builder`` selects how the queue is
-    constructed: ``"prefix_sum"`` (default) is the on-device Pallas stream
-    compaction, ``"argsort"`` the retained sort-based reference.
-
-    ``epilogue_mult`` (M, N): fused Hadamard applied to the output inside
-    the kernel (the backward σ′ multiply), saving a full-size VPU pass.
+    Kept (warn-once) so external callers and ``kernels/ref.py`` comparisons
+    keep working; new code builds a ``GemmSpec``.
     """
-    m, k = a.shape
-    k2, n = b.shape
-    assert k == k2, (a.shape, b.shape)
-    bm, bk, bn = block
-    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
-    ni, nk, nj = mp // bm, kp // bk, np_ // bn
-
-    a_p = _pad_to(a, mp, kp)
-    b_p = _pad_to(b, kp, np_)
-    mult_p = None
-    if epilogue_mult is not None:
-        assert epilogue_mult.shape == (m, n), (epilogue_mult.shape, (m, n))
-        mult_p = _pad_to(epilogue_mult.astype(jnp.float32), mp, np_)
-
-    def _pad_mask(mask, nb0, nb1):
-        if mask is None:
-            return _ones_bitmap(nb0, nb1)
-        mask = mask.astype(jnp.int32)
-        p0, p1 = nb0 - mask.shape[0], nb1 - mask.shape[1]
-        if p0 or p1:
-            mask = jnp.pad(mask, ((0, p0), (0, p1)))
-        return mask
-
-    om = _pad_mask(out_mask, ni, nj)
-    am = _pad_mask(a_mask, ni, nk)
-    bmask = _pad_mask(b_mask, nk, nj)
-
-    itp = _use_interpret(interpret)
-
-    def _predicated():
-        return masked_matmul_kernel(
-            a_p, b_p, om, am, bmask,
-            bm=bm, bk=bk, bn=bn, out_dtype=out_dtype,
-            epilogue_mult=mult_p, interpret=itp,
-        )
-
-    if compact:
-        s_cap = max_active_blocks if max_active_blocks is not None else ni * nj
-        # Active-queue construction in the WDU's "lexicographically smallest
-        # state tuple first" order — row-major (i, j).  The default builder
-        # is the O(T) Pallas prefix-sum compaction; "argsort" keeps the
-        # seed's O(T log T) sort as a reference/fallback.
-        ii, jj, n_live_v = build_queue(
-            om, capacity=s_cap, builder=queue_builder, interpret=itp)
-        n_live = n_live_v[0]
-        n_active = jnp.minimum(n_live, s_cap).reshape(1)
-
-        def _compact():
-            compacted = compact_masked_matmul_kernel(
-                a_p, b_p, ii, jj, n_active, am, bmask,
-                bm=bm, bk=bk, bn=bn, out_dtype=out_dtype,
-                epilogue_mult=mult_p, interpret=itp,
-            )
-            # Scatter the queue back to dense tile layout.  Padding steps
-            # carry zero tiles at coords (ii, jj) of dead queue slots — we
-            # direct dead slots at (0, 0) via scatter-ADD so they are no-ops.
-            live = (jnp.arange(s_cap) < n_active[0]).astype(out_dtype)
-            masked = compacted * live[:, None, None]
-            si = jnp.where(jnp.arange(s_cap) < n_active[0], ii, 0)
-            sj = jnp.where(jnp.arange(s_cap) < n_active[0], jj, 0)
-            out_tiles = jnp.zeros((ni, nj, bm, bn), out_dtype)
-            out_tiles = out_tiles.at[si, sj].add(masked)
-            return out_tiles.transpose(0, 2, 1, 3).reshape(mp, np_)
-
-        if s_cap >= ni * nj:
-            out = _compact()          # queue provably cannot overflow
-        else:
-            # Queue-capacity overflow would silently drop live tiles.  The
-            # live count is a traced value, so detect at runtime and fall
-            # back to the predicated (full-grid) schedule — exact always.
-            out = jax.lax.cond(n_live > s_cap, _predicated, _compact)
-    else:
-        out = _predicated()
-    return out[:m, :n]
+    _warn_deprecated("masked_matmul")
+    spec = GemmSpec(
+        block=block, groups=1,
+        schedule="compact" if compact else "predicated",
+        epilogue="none" if epilogue_mult is None else "sigma_prime",
+        queue_builder=queue_builder, max_active_blocks=max_active_blocks,
+        out_dtype=out_dtype, interpret=interpret)
+    return sparse_gemm(a, b, GemmMasks(out_mask, a_mask, b_mask), spec,
+                       epilogue_mult=epilogue_mult)
 
 
 def grouped_masked_matmul(
@@ -243,95 +386,22 @@ def grouped_masked_matmul(
     epilogue_mult: Optional[jnp.ndarray] = None,
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
-    """Block-sparse batched ``a[g] @ b[g]`` over a leading group axis — the
-    GEMM form of grouped/depthwise convs.
+    """DEPRECATED: grouped masked GEMM — now spelled ``sparse_gemm`` with a
+    ``GemmSpec(groups=G)``.  Kept as a warn-once shim."""
+    _warn_deprecated("grouped_masked_matmul")
+    spec = GemmSpec(
+        block=block, groups=a.shape[0],
+        schedule="compact" if compact else "predicated",
+        epilogue="none" if epilogue_mult is None else "sigma_prime",
+        queue_builder=queue_builder, max_active_blocks=max_active_blocks,
+        out_dtype=out_dtype, interpret=interpret)
+    return sparse_gemm(a, b, GemmMasks(out_mask, a_mask, b_mask), spec,
+                       epilogue_mult=epilogue_mult)
 
-    Operands are (G, M, K) and (G, K, N); masks carry a leading G axis and
-    are per-group block bitmaps with exactly ``masked_matmul``'s semantics
-    — groups never mix (the group-boundary contract).  ``compact=True``
-    builds ONE queue spanning all groups: the (G, Mb, Nb) out_mask is
-    flattened row-major — lexicographic ⟨g, i, j⟩, the WDU dispatch order
-    lifted to the group axis — and compacted by the same builder backends
-    as the 2-D path, so depthwise layers (many groups, few tiles each)
-    still launch a single uniform work stream.  Overflow falls back to the
-    grouped predicated schedule — never a silent truncation.
-    """
-    g, m, k = a.shape
-    g2, k2, n = b.shape
-    assert g == g2 and k == k2, (a.shape, b.shape)
-    bm, bk, bn = block
-    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
-    ni, nk, nj = mp // bm, kp // bk, np_ // bn
 
-    def _pad3(x, d1, d2):
-        p1, p2 = d1 - x.shape[1], d2 - x.shape[2]
-        if p1 == 0 and p2 == 0:
-            return x
-        return jnp.pad(x, ((0, 0), (0, p1), (0, p2)))
-
-    a_p = _pad3(a, mp, kp)
-    b_p = _pad3(b, kp, np_)
-    mult_p = None
-    if epilogue_mult is not None:
-        assert epilogue_mult.shape == (g, m, n), epilogue_mult.shape
-        mult_p = _pad3(epilogue_mult.astype(jnp.float32), mp, np_)
-
-    def _pad_mask3(mask, nb0, nb1):
-        if mask is None:
-            return jnp.ones((g, nb0, nb1), jnp.int32)
-        mask = mask.astype(jnp.int32)
-        return _pad3(mask, nb0, nb1)
-
-    om = _pad_mask3(out_mask, ni, nj)
-    am = _pad_mask3(a_mask, ni, nk)
-    bmask = _pad_mask3(b_mask, nk, nj)
-
-    itp = _use_interpret(interpret)
-
-    def _predicated():
-        return grouped_masked_matmul_kernel(
-            a_p, b_p, om, am, bmask,
-            bm=bm, bk=bk, bn=bn, out_dtype=out_dtype,
-            epilogue_mult=mult_p, interpret=itp,
-        )
-
-    if compact:
-        s_cap = max_active_blocks if max_active_blocks is not None \
-            else g * ni * nj
-        # One queue over all groups: flatten (G, Mb, Nb) to (G·Mb, Nb) so
-        # the row-major builder order IS lexicographic (g, i, j); decode the
-        # group coordinate back out of the fused row index.
-        fi, jj, n_live_v = build_queue(
-            om.reshape(g * ni, nj), capacity=s_cap, builder=queue_builder,
-            interpret=itp)
-        gg = fi // ni
-        ii = fi % ni
-        n_live = n_live_v[0]
-        n_active = jnp.minimum(n_live, s_cap).reshape(1)
-
-        def _compact():
-            compacted = grouped_compact_masked_matmul_kernel(
-                a_p, b_p, gg, ii, jj, n_active, am, bmask,
-                bm=bm, bk=bk, bn=bn, out_dtype=out_dtype,
-                epilogue_mult=mult_p, interpret=itp,
-            )
-            live = (jnp.arange(s_cap) < n_active[0]).astype(out_dtype)
-            masked = compacted * live[:, None, None]
-            sg = jnp.where(jnp.arange(s_cap) < n_active[0], gg, 0)
-            si = jnp.where(jnp.arange(s_cap) < n_active[0], ii, 0)
-            sj = jnp.where(jnp.arange(s_cap) < n_active[0], jj, 0)
-            out_tiles = jnp.zeros((g, ni, nj, bm, bn), out_dtype)
-            out_tiles = out_tiles.at[sg, si, sj].add(masked)
-            return out_tiles.transpose(0, 1, 3, 2, 4).reshape(g, mp, np_)
-
-        if s_cap >= g * ni * nj:
-            out = _compact()
-        else:
-            out = jax.lax.cond(n_live > s_cap, _predicated, _compact)
-    else:
-        out = _predicated()
-    return out[:, :m, :n]
-
+# ---------------------------------------------------------------------------
+# Bitmap producers (encode/scan) — unchanged contract
+# ---------------------------------------------------------------------------
 
 def bitmap_scan(
     x: jnp.ndarray,
@@ -352,12 +422,12 @@ def bitmap_scan(
     m, n = x.shape
     bm, bn = block
     lr = bm * max(1, -(-8 // bm))
-    mp, np_ = _ceil_to(m, lr), _ceil_to(n, bn)
-    x_p = _pad_to(x, mp, np_)
+    mp, np_ = ceil_to(m, lr), ceil_to(n, bn)
+    x_p = pad_to(x, mp, np_)
     stats.record(f"scan_pallas:{kind}")
     bitmap = bitmap_scan_kernel(x_p, bm=bm, bn=bn, lr=lr, lc=np_,
                                 interpret=_use_interpret(interpret))
-    return bitmap[: _ceil_to(m, bm) // bm, :]
+    return bitmap[: ceil_to(m, bm) // bm, :]
 
 
 def relu_encode(
@@ -380,63 +450,53 @@ def relu_encode(
     bm, bn = block
     # Launch slab: a multiple of the bitmap granularity covering >=8 rows.
     lr = bm * max(1, -(-8 // bm))
-    mp, np_ = _ceil_to(m, lr), _ceil_to(n, bn)
-    z_p = _pad_to(z, mp, np_)
+    mp, np_ = ceil_to(m, lr), ceil_to(n, bn)
+    z_p = pad_to(z, mp, np_)
     stats.record("encode:act")
     y, bitmap = relu_encode_kernel(z_p, bm=bm, bn=bn, lr=lr, lc=np_,
                                    interpret=_use_interpret(interpret))
-    return y[:m, :n], bitmap[: _ceil_to(m, bm) // bm, :]
+    return y[:m, :n], bitmap[: ceil_to(m, bm) // bm, :]
 
+
+# ---------------------------------------------------------------------------
+# The paper's composite ops, spec-driven
+# ---------------------------------------------------------------------------
 
 def relu_bwd_masked(
     dy: jnp.ndarray,          # (M, K) δ_post — gradient arriving from layer above
     w_t: jnp.ndarray,         # (K, N) Wᵀ of the producer layer
     relu_mask: jnp.ndarray,   # (M, N) {0,1} σ'(z) captured in the forward pass
     *,
-    block: Tuple[int, int, int] = DEFAULT_BLOCK,
+    spec: Optional[GemmSpec] = None,
     use_input_sparsity: bool = True,
     use_output_sparsity: bool = True,
-    compact: bool = False,
-    queue_builder: str = "prefix_sum",
-    out_dtype=jnp.float32,
-    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     """δ_pre = (δ_post @ Wᵀ) ⊙ σ'(z) with block skipping — the paper's core op.
 
     OUTPUT sparsity: tiles where σ'(z) is all-zero are never computed.
     INPUT sparsity: K-tiles of δ_post that are all-zero are skipped.
-    Partially-live tiles are computed densely then Hadamard-masked — exact.
+    Partially-live tiles are computed densely then Hadamard-masked — exact
+    (the σ′ multiply rides the kernel's fused epilogue).  ``spec`` carries
+    tile shape / schedule / queue builder; its epilogue field is forced to
+    ``sigma_prime`` since this op IS the fused-epilogue GEMM.
     """
-    bm, bk, bn = block
-    m, n = relu_mask.shape
-    mp, np_ = _ceil_to(m, bm), _ceil_to(n, bn)
-    mask_p = _pad_to(relu_mask.astype(jnp.float32), mp, np_)
-    out_mask = _block_bitmap(mask_p, bm, bn) if use_output_sparsity else None
-
-    a_mask = None
-    if use_input_sparsity:
-        kp = _ceil_to(dy.shape[1], bk)
-        a_mask = _block_bitmap(_pad_to(dy.astype(jnp.float32), mp, kp), bm, bk)
-
-    # Fused σ′-Hadamard epilogue: partially-live tiles are masked inside the
-    # kernel at writeback (free on the ASIC's output bitmap; zero extra HBM
-    # round-trips here).
-    return masked_matmul(
-        dy, w_t, out_mask=out_mask, a_mask=a_mask, b_mask=None,
-        block=block, out_dtype=out_dtype, compact=compact,
-        queue_builder=queue_builder,
-        epilogue_mult=relu_mask.astype(jnp.float32), interpret=interpret,
-    )
+    spec = GemmSpec() if spec is None else spec
+    spec = spec.with_(epilogue="sigma_prime", groups=1)
+    bm, bk, bn = spec.block
+    mask32 = relu_mask.astype(jnp.float32)
+    out_mask = block_bitmap(mask32, bm, bn) if use_output_sparsity else None
+    a_mask = block_bitmap(dy.astype(jnp.float32), bm, bk) \
+        if use_input_sparsity else None
+    return sparse_gemm(dy, w_t, GemmMasks(out_mask, a_mask, None), spec,
+                       epilogue_mult=mask32)
 
 
 def weight_grad_masked(
     x_t: jnp.ndarray,        # (N, M) Xᵀ — activations (sparse post-ReLU)
     dy: jnp.ndarray,         # (N, K) δ — gradient (sparse post-ReLU-Hadamard)
     *,
-    block: Tuple[int, int, int] = DEFAULT_BLOCK,
+    spec: Optional[GemmSpec] = None,
     use_input_sparsity: bool = True,
-    out_dtype=jnp.float32,
-    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     """dW = Xᵀ @ δ with INPUT sparsity on both operands (the paper's WG stage).
 
@@ -444,15 +504,11 @@ def weight_grad_masked(
     needed — but the contraction (batch·spatial) dimension tiles where
     either operand is all-zero are skipped.
     """
-    bm, bk, bn = block
+    spec = GemmSpec() if spec is None else spec
+    spec = spec.with_(epilogue="none", groups=1)
+    bm, bk, bn = spec.block
     a_mask = b_mask = None
     if use_input_sparsity:
-        mp = _ceil_to(x_t.shape[0], bm)
-        kp = _ceil_to(x_t.shape[1], bk)
-        np_ = _ceil_to(dy.shape[1], bn)
-        a_mask = _block_bitmap(_pad_to(x_t.astype(jnp.float32), mp, kp), bm, bk)
-        b_mask = _block_bitmap(_pad_to(dy.astype(jnp.float32), kp, np_), bk, bn)
-    return masked_matmul(
-        x_t, dy, out_mask=None, a_mask=a_mask, b_mask=b_mask,
-        block=block, out_dtype=out_dtype, interpret=interpret,
-    )
+        a_mask = block_bitmap(x_t.astype(jnp.float32), bm, bk)
+        b_mask = block_bitmap(dy.astype(jnp.float32), bk, bn)
+    return sparse_gemm(x_t, dy, GemmMasks(None, a_mask, b_mask), spec)

@@ -30,11 +30,13 @@ executable statement of that contract and the property suite
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from . import stats
 
 try:  # TPU-specific helpers; present in jax>=0.4 under .tpu
     from jax.experimental.pallas import tpu as pltpu
@@ -129,3 +131,73 @@ def build_queue_kernel(
     )
     ii, jj, cnt = fn(blocks)
     return ii[:capacity, 0], jj[:capacity, 0], cnt[0]
+
+
+# ---------------------------------------------------------------------------
+# Builder dispatch — the queue-construction side of the sparse_gemm call
+# contract.  kernels/ops.py's dispatcher calls ONLY this function; the
+# argsort reference lives here next to the kernel it is the oracle for.
+# ---------------------------------------------------------------------------
+
+def _parse_version(v: str):
+    """Leading-digit parse per component: '0.4.27rc1' → (0, 4, 27); any
+    unparseable component compares as 0 (never an import-time crash)."""
+    import re
+    out = []
+    for part in v.split(".")[:3]:
+        m = re.match(r"\d+", part)
+        out.append(int(m.group()) if m else 0)
+    return tuple(out)
+
+
+_JAX_VERSION = _parse_version(jax.__version__)
+
+
+def _stable_argsort_desc(flat: jnp.ndarray) -> jnp.ndarray:
+    """Stable descending argsort of a {0,1} vector (active indices first,
+    row-major within each class) — the retained O(T log T) queue-builder
+    reference.  ``stable=`` only exists from jax 0.4.27; earlier releases
+    sort stably by default, so the kwarg is version-gated, not assumed."""
+    if _JAX_VERSION >= (0, 4, 27):
+        return jnp.argsort(-flat, stable=True)
+    return jnp.argsort(-flat)  # pre-0.4.27 argsort is stable by default
+
+
+def build_queue(
+    bitmap: jnp.ndarray,
+    *,
+    capacity: int,
+    builder: str = "prefix_sum",
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Active-tile queue ``(ii, jj, n_live)`` from a (Mb, Nb) tile bitmap.
+
+    Queue order is the WDU's "lexicographically smallest state tuple first"
+    — row-major (i, j); ``core.workredist.static_queue_order`` is the
+    reference.  ``n_live`` (1,) is the TRUE set-bit count (may exceed
+    ``capacity``; slots past it are zero-padded).
+
+    builder="prefix_sum" (default): the Pallas blockwise exclusive-prefix-
+    sum stream compaction above — O(T), no sort on the critical path.
+    builder="argsort": the seed's O(T log T) sort, kept as the reference
+    and fallback.  Each construction is counted by ``stats`` as
+    ``queue:<builder>``.
+    """
+    mb, nb = bitmap.shape
+    stats.record(f"queue:{builder}")
+    if builder == "argsort":
+        flat = bitmap.reshape(-1)
+        order = _stable_argsort_desc(flat)[:capacity]
+        if order.shape[0] < capacity:           # capacity may exceed T
+            order = jnp.pad(order, (0, capacity - order.shape[0]))
+        ii = (order // nb).astype(jnp.int32)
+        jj = (order % nb).astype(jnp.int32)
+        # Dead slots must carry valid (in-range) coords for the consumer's
+        # gathers; zero them like the prefix-sum builder does.
+        live = jnp.arange(capacity) < flat.sum()
+        ii = jnp.where(live, ii, 0)
+        jj = jnp.where(live, jj, 0)
+        return ii, jj, flat.sum().reshape(1)
+    if builder != "prefix_sum":
+        raise ValueError(f"unknown queue builder: {builder!r}")
+    return build_queue_kernel(bitmap, capacity=capacity, interpret=interpret)

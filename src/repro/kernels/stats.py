@@ -12,24 +12,47 @@ Counts are recorded at Python trace time, so one eager fwd+bwd (or one
 trace of a jitted step) yields the per-step op count.  Derivations are
 deliberately NOT recorded — they are pure bitmap arithmetic, the cheap
 "free byproduct" reuse the paper is about.
+
+Key families (normalized):
+  encode:act / scan:<what> / scan_pallas:<what>   bitmap computations
+  queue:<builder>                                 work-queue constructions
+  gemm:<schedule>:<g>                             one per sparse_gemm
+                                                  dispatch (schedule ∈
+                                                  {predicated, compact,
+                                                  dense}; g = group count)
+  conv:dense_fallback                             escaped-the-engine convs
+
+Legacy key heads from the pre-redesign orchestrators ("mm", "gmm",
+"grouped_mm") are aliased onto the normalized ``gemm`` family at record
+time, so old recorders and new readers agree.
 """
 from __future__ import annotations
 
 import collections
 import contextlib
-from typing import Dict
+from typing import Dict, Optional
 
 _COUNTS: "collections.Counter[str]" = collections.Counter()
 
+# Pre-redesign per-GEMM key heads → the normalized family.  Aliasing happens
+# at record() time so queries never need to know the legacy spellings.
+_KEY_ALIASES = {"mm": "gemm", "gmm": "gemm", "grouped_mm": "gemm"}
+
+
+def _normalize(kind: str) -> str:
+    head, sep, rest = kind.partition(":")
+    return _KEY_ALIASES.get(head, head) + sep + rest
+
 
 def record(kind: str) -> None:
-    """Register one bitmap *computation*.  ``kind`` is ``<how>:<what>``:
-    how ∈ {encode, scan, queue} (fused-kernel vs standalone dense scan vs
-    work-queue construction),
+    """Register one counted event.  ``kind`` is ``<how>:<what>``:
+    how ∈ {encode, scan, scan_pallas, queue, gemm} (fused-kernel vs
+    standalone dense scan vs work-queue construction vs GEMM dispatch),
     what ∈ {act, grad} for encode/scan; for queue it is the builder backend
-    ∈ {prefix_sum, argsort} — so ``total("argsort")`` audits that the
-    default compact path never sorts (the PR-2 contract)."""
-    _COUNTS[kind] += 1
+    ∈ {prefix_sum, argsort} — so ``queue_builds("argsort")`` audits that the
+    default compact path never sorts (the PR-2 contract); for gemm it is
+    ``<schedule>:<g>`` — the dispatcher's normalized launch key."""
+    _COUNTS[_normalize(kind)] += 1
 
 
 def reset() -> None:
@@ -53,6 +76,27 @@ def queue_builds(builder: str = "") -> int:
     return sum(v for k, v in _COUNTS.items()
                if k.startswith("queue:")
                and (not builder or k == "queue:" + builder))
+
+
+def gemm_launches(schedule: str = "", groups: Optional[int] = None) -> int:
+    """GEMM dispatches (``gemm:<schedule>:<g>``), optionally filtered by
+    schedule and/or group count — the reader the kernel audits use for the
+    normalized per-launch keys."""
+    n = 0
+    for k, v in _COUNTS.items():
+        if not k.startswith("gemm:"):
+            continue
+        # Aliased legacy recorders may lack the :<g> suffix ("mm:compact"
+        # → "gemm:compact"); treat the group field as unknown rather than
+        # crashing the reader.
+        _, _, tail = k.partition(":")
+        sched, _, g = tail.partition(":")
+        if schedule and sched != schedule:
+            continue
+        if groups is not None and (not g.isdigit() or int(g) != groups):
+            continue
+        n += v
+    return n
 
 
 @contextlib.contextmanager

@@ -356,6 +356,30 @@ class CNNModel:
         walk(self.layers, self.in_ch, self.image_size, False)
         return specs
 
+    def gemm_workload(self, batch: int) -> List[dict]:
+        """Per-layer, per-stage GEMM requests this model's training step
+        lowers onto the ``kernels.ops.sparse_gemm`` dispatcher: one row per
+        (layer, stage ∈ {fp, bp_dx, wg}) with the per-group (M, K, N) dims
+        and group count — the shardable workload description a ``GemmSpec``
+        is resolved against (consumed by
+        ``benchmarks/kernel_audit.launch_shape_audit``)."""
+        rows: List[dict] = []
+        for s in self.conv_specs(batch):
+            g = s.groups
+            t_out = batch * s.u * s.v            # output pixels (FP/WG rows)
+            t_in = batch * s.h * s.w             # input pixels (dX rows)
+            for stage, m, k, n in (
+                    ("fp", t_out, s.crs, s.m // g),
+                    ("bp_dx", t_in, s.mrs, s.c // g),
+                    ("wg", s.crs, t_out, s.m // g)):
+                # cin/cout let the consumer recompute the engine's channel
+                # granularities (conv_channel_granularity needs the FULL
+                # channel counts, not the per-group dims).
+                rows.append({"layer": s.name, "stage": stage, "groups": g,
+                             "m": m, "k": k, "n": n,
+                             "cin": s.c, "cout": s.m})
+        return rows
+
 
 def build_cnn(name: str, *, image_size: int = 32, width: float = 1.0,
               num_classes: int = 100) -> CNNModel:

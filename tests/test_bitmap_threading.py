@@ -167,10 +167,12 @@ def test_compact_epilogue_bounded_queue_grads_exact(queue_builder):
     relu_mask = jnp.asarray(rng.random((40, 48)) > 0.6, jnp.float32)
     mask_p = jnp.pad(relu_mask, ((0, 0), (0, 0)))
     n_live = int(np.asarray(kref.block_any_nonzero(mask_p, 8, 16)).sum())
-    got = kops.masked_matmul(
-        dy, w_t, out_mask=kref.block_any_nonzero(mask_p, 8, 16),
-        block=(8, 8, 16), compact=True, max_active_blocks=n_live,
-        queue_builder=queue_builder, epilogue_mult=relu_mask)
+    spec = kops.GemmSpec(block=(8, 8, 16), schedule="compact",
+                         max_active_blocks=n_live,
+                         queue_builder=queue_builder, epilogue="sigma_prime")
+    got = kops.sparse_gemm(
+        dy, w_t, kops.GemmMasks(out=kref.block_any_nonzero(mask_p, 8, 16)),
+        spec, epilogue_mult=relu_mask)
     want = kref.relu_bwd_masked(dy, w_t, relu_mask, bm=8, bk=8, bn=16)
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
     # fused-epilogue zeros are exact zeros even through the scatter-back
@@ -313,7 +315,12 @@ def test_dc_policy_computes_no_bitmaps():
     stats.reset()
     _grad_eagerly(lambda x, w: (act_matmul(x, w, pol.DC, "relu") ** 2).sum(),
                   x, w)
-    assert stats.total() == 0, stats.counts()
+    # no bitmap computations, no queue builds — only the dispatcher's
+    # normalized gemm:dense launch keys (fwd + dx + dw = 3)
+    assert stats.total("act") == 0 and stats.total("grad") == 0, stats.counts()
+    assert stats.queue_builds() == 0, stats.counts()
+    assert stats.gemm_launches(schedule="dense", groups=1) == 3, stats.counts()
+    assert stats.gemm_launches() == stats.total() == 3, stats.counts()
 
 
 def test_granularity_helpers_divide_all_consumers():

@@ -1,0 +1,268 @@
+"""The spec-driven sparse_gemm collapse: one dispatch API, zero regressions.
+
+Four contract families:
+  1. BIT-EXACTNESS NET — ``sparse_gemm`` at G=1 is bit-identical to the
+     pre-redesign 2-D orchestration (re-built here on the RETAINED 2-D
+     reference kernels in kernels/masked_matmul.py) across
+     {predicated, compact} × {none, sigma_prime epilogue} × queue capacity
+     {unbounded, exactly-live, overflow→fallback}.
+  2. the deprecation shims (`masked_matmul`/`grouped_masked_matmul`) warn
+     once and forward exactly.
+  3. policy→spec resolution (`SparsityPolicy.gemm_spec`) lands the right
+     schedule/queue/tiles, incl. grouped_gemm_block degenerate tiles, and
+     the default policy still builds queues sort-free
+     (``stats.queue_builds("argsort") == 0``).
+  4. the dispatcher's normalized ``gemm:<schedule>:<g>`` stats keys and
+     ``GemmSpec.launch_geometry``'s pad/grid/queue arithmetic.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import policy as pol
+from repro.kernels import ops, ref, stats
+from repro.kernels.masked_matmul import (
+    compact_masked_matmul_kernel, masked_matmul_kernel,
+)
+from repro.kernels.ops import GemmMasks, GemmSpec
+from repro.kernels.shapes import ceil_to, pad_mask, pad_to
+
+
+# ---------------------------------------------------------------------------
+# 1. bit-exactness vs the pre-redesign 2-D orchestration
+# ---------------------------------------------------------------------------
+
+def _legacy_masked_matmul(a, b, out_mask=None, a_mask=None, b_mask=None, *,
+                          block, out_dtype=jnp.float32, compact=False,
+                          max_active_blocks=None, epilogue_mult=None):
+    """The pre-redesign 2-D orchestrator, frozen verbatim on the retained
+    2-D kernels — the reference ``sparse_gemm(G=1)`` must match to the bit."""
+    m, k = a.shape
+    k2, n = b.shape
+    bm, bk, bn = block
+    mp, kp, np_ = ceil_to(m, bm), ceil_to(k, bk), ceil_to(n, bn)
+    ni, nk, nj = mp // bm, kp // bk, np_ // bn
+    a_p, b_p = pad_to(a, mp, kp), pad_to(b, kp, np_)
+    mult_p = None
+    if epilogue_mult is not None:
+        mult_p = pad_to(epilogue_mult.astype(jnp.float32), mp, np_)
+    om = pad_mask(out_mask, ni, nj)
+    am = pad_mask(a_mask, ni, nk)
+    bmask = pad_mask(b_mask, nk, nj)
+
+    def _predicated():
+        return masked_matmul_kernel(
+            a_p, b_p, om, am, bmask, bm=bm, bk=bk, bn=bn,
+            out_dtype=out_dtype, epilogue_mult=mult_p, interpret=True)
+
+    if compact:
+        s_cap = max_active_blocks if max_active_blocks is not None \
+            else ni * nj
+        ii, jj, n_live_v = ops.build_queue(om, capacity=s_cap)
+        n_live = n_live_v[0]
+        n_active = jnp.minimum(n_live, s_cap).reshape(1)
+
+        def _compact():
+            compacted = compact_masked_matmul_kernel(
+                a_p, b_p, ii, jj, n_active, am, bmask, bm=bm, bk=bk, bn=bn,
+                out_dtype=out_dtype, epilogue_mult=mult_p, interpret=True)
+            live = (jnp.arange(s_cap) < n_active[0]).astype(out_dtype)
+            masked = compacted * live[:, None, None]
+            si = jnp.where(jnp.arange(s_cap) < n_active[0], ii, 0)
+            sj = jnp.where(jnp.arange(s_cap) < n_active[0], jj, 0)
+            out_tiles = jnp.zeros((ni, nj, bm, bn), out_dtype)
+            out_tiles = out_tiles.at[si, sj].add(masked)
+            return out_tiles.transpose(0, 2, 1, 3).reshape(mp, np_)
+
+        if s_cap >= ni * nj:
+            out = _compact()
+        else:
+            out = jax.lax.cond(n_live > s_cap, _predicated, _compact)
+    else:
+        out = _predicated()
+    return out[:m, :n]
+
+
+def _operands(m, k, n, key, sparsity=0.6):
+    rng = np.random.default_rng(key)
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    a *= rng.random((m, k)) > sparsity
+    b = rng.standard_normal((k, n)).astype(np.float32)
+    mask = (rng.random((m, n)) > sparsity).astype(np.float32)
+    return jnp.asarray(a), jnp.asarray(b), jnp.asarray(mask)
+
+
+@pytest.mark.parametrize("shape", [(40, 24, 48), (33, 17, 25), (32, 32, 32)])
+@pytest.mark.parametrize("schedule", ["predicated", "compact"])
+@pytest.mark.parametrize("epilogue", ["none", "sigma_prime"])
+def test_g1_sparse_gemm_bit_exact_vs_pre_redesign(shape, schedule, epilogue):
+    """ACCEPTANCE: the G=1 lowering of the grouped engine reproduces the
+    old 2-D orchestration to the BIT on every schedule × epilogue cell."""
+    m, k, n = shape
+    a, b, mask = _operands(m, k, n, key=hash(shape) % 1000)
+    bm, bk, bn = 8, 8, 16
+    om = ref.block_any_nonzero(
+        jnp.pad(mask, ((0, -m % bm), (0, -n % bn))), bm, bn)
+    am = ref.block_any_nonzero(
+        jnp.pad(a, ((0, -m % bm), (0, -k % bk))), bm, bk)
+    mult = mask if epilogue == "sigma_prime" else None
+    spec = GemmSpec(block=(bm, bk, bn), schedule=schedule, epilogue=epilogue,
+                    interpret=True)
+    got = ops.sparse_gemm(a, b, GemmMasks(om, am, None), spec,
+                          epilogue_mult=mult)
+    want = _legacy_masked_matmul(
+        a, b, om, am, block=(bm, bk, bn),
+        compact=(schedule == "compact"), epilogue_mult=mult)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("epilogue", ["none", "sigma_prime"])
+@pytest.mark.parametrize("cap_kind", ["exact", "overflow"])
+def test_g1_bounded_queue_and_overflow_bit_exact(epilogue, cap_kind):
+    """Compact × bounded capacity: exactly-live stays on the queue path,
+    one-below-live triggers the predicated fallback — both bit-identical
+    to the pre-redesign orchestration of the same request."""
+    m, k, n = 40, 24, 48
+    a, b, mask = _operands(m, k, n, key=7)
+    om = ref.block_any_nonzero(mask, 8, 16)
+    n_live = int(np.asarray(om).sum())
+    cap = n_live if cap_kind == "exact" else n_live - 1
+    mult = mask if epilogue == "sigma_prime" else None
+    spec = GemmSpec(block=(8, 8, 16), schedule="compact", epilogue=epilogue,
+                    max_active_blocks=cap, interpret=True)
+    got = ops.sparse_gemm(a, b, GemmMasks(out=om), spec, epilogue_mult=mult)
+    want = _legacy_masked_matmul(a, b, om, block=(8, 8, 16), compact=True,
+                                 max_active_blocks=cap, epilogue_mult=mult)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # ...and both equal the oracle (the fallback never truncates)
+    oracle = ref.masked_matmul(a, b, out_mask=om, bm=8, bk=8, bn=16,
+                               epilogue_mult=mult)
+    np.testing.assert_allclose(got, oracle, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# 2. deprecation shims
+# ---------------------------------------------------------------------------
+
+def test_shims_warn_once_and_forward_exactly():
+    a, b, mask = _operands(24, 16, 24, key=11)
+    om = ref.block_any_nonzero(mask, 8, 8)
+    ops._DEPRECATION_WARNED.clear()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        r1 = ops.masked_matmul(a, b, out_mask=om, block=(8, 8, 8),
+                               compact=True)
+        r2 = ops.masked_matmul(a, b, out_mask=om, block=(8, 8, 8))
+    deps = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(deps) == 1 and "sparse_gemm" in str(deps[0].message)
+    want = ops.sparse_gemm(a, b, GemmMasks(out=om),
+                           GemmSpec(block=(8, 8, 8), schedule="compact"))
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(want))
+    np.testing.assert_allclose(r1, r2, rtol=1e-6, atol=1e-6)
+
+    g = 3
+    ag = jnp.stack([a, a * 2, a * 3])
+    bg = jnp.stack([b, b, b])
+    omg = jnp.stack([om, om, om])
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        rg = ops.grouped_masked_matmul(ag, bg, omg, block=(8, 8, 8))
+    deps = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(deps) == 1                      # its own warn-once key
+    wg = ops.sparse_gemm(ag, bg, GemmMasks(out=omg),
+                         GemmSpec(block=(8, 8, 8), groups=g))
+    np.testing.assert_array_equal(np.asarray(rg), np.asarray(wg))
+
+
+# ---------------------------------------------------------------------------
+# 3. policy → spec resolution
+# ---------------------------------------------------------------------------
+
+def test_policy_gemm_spec_resolution():
+    p = pol.IN_OUT_WR.with_(kernel_impl="pallas", block=(8, 16, 8),
+                            queue_builder="argsort")
+    s = p.gemm_spec(groups=1)
+    assert (s.schedule, s.block, s.queue_builder, s.groups) \
+        == ("compact", (8, 16, 8), "argsort", 1)
+    assert p.with_(work_redistribution=False).gemm_spec().schedule \
+        == "predicated"
+    assert pol.IN_OUT.gemm_spec().schedule == "dense"       # xla_ref
+    assert pol.DC.gemm_spec().schedule == "dense"
+    # degenerate grouped tiles == the grouped_gemm_block rule, any G incl. 1
+    for g in (1, 8):
+        s = p.gemm_spec(groups=g, dims=(4096, 9, 1), grans=(1, 1, 1))
+        assert s.block == pol.grouped_gemm_block(p, (4096, 9, 1), (1, 1, 1))
+        assert s.block == (8, 9, 1)
+    # fused-epilogue declaration
+    assert p.gemm_spec(fused_epilogue=True).epilogue == "sigma_prime"
+
+
+def test_default_policy_training_step_is_sort_free_and_spec_routed():
+    """End-to-end: an IN_OUT_WR step dispatches every GEMM through
+    sparse_gemm (compact schedule) and never builds a queue by sorting."""
+    from repro.core.sparse_linear import relu_matmul
+
+    policy = pol.IN_OUT_WR.with_(kernel_impl="pallas", block=(8, 8, 8))
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((24, 16)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((16, 24)), jnp.float32)
+    stats.reset()
+    jax.grad(lambda x, w: (relu_matmul(x, w, policy) ** 2).sum(), (0, 1))(x, w)
+    assert stats.queue_builds("argsort") == 0, stats.counts()
+    assert stats.gemm_launches() == stats.gemm_launches(schedule="compact"), \
+        stats.counts()
+    assert stats.gemm_launches(schedule="compact", groups=1) == 3  # y, dx, dW
+
+
+# ---------------------------------------------------------------------------
+# 4. spec validation, stats keys, launch geometry
+# ---------------------------------------------------------------------------
+
+def test_gemm_spec_validates():
+    with pytest.raises(ValueError, match="schedule"):
+        GemmSpec(schedule="eager")
+    with pytest.raises(ValueError, match="epilogue"):
+        GemmSpec(epilogue="relu")
+    with pytest.raises(ValueError, match="groups"):
+        GemmSpec(groups=0)
+    a = jnp.ones((8, 8), jnp.float32)
+    with pytest.raises(ValueError, match="groups"):
+        ops.sparse_gemm(a, a, None, GemmSpec(groups=2))
+    with pytest.raises(ValueError, match="epilogue"):
+        ops.sparse_gemm(a, a, None, GemmSpec(), epilogue_mult=a)
+    with pytest.raises(ValueError, match="epilogue"):
+        ops.sparse_gemm(a, a, None, GemmSpec(epilogue="sigma_prime"))
+    with pytest.raises(ValueError, match="group axis"):
+        ops.sparse_gemm(a[None], a[None], None, GemmSpec(groups=2))
+
+
+def test_dispatch_records_normalized_stats_keys():
+    a = jnp.ones((8, 8), jnp.float32)
+    stats.reset()
+    ops.sparse_gemm(a, a, None, GemmSpec(block=(8, 8, 8)))
+    ops.sparse_gemm(a[None], a[None], None,
+                    GemmSpec(block=(8, 8, 8), schedule="compact", groups=1))
+    ops.sparse_gemm(a, a, None, GemmSpec(schedule="dense"))
+    c = stats.counts()
+    assert c["gemm:predicated:1"] == 1 and c["gemm:compact:1"] == 1 \
+        and c["gemm:dense:1"] == 1, c
+    assert stats.gemm_launches() == 3
+    assert stats.gemm_launches(schedule="compact") == 1
+    # legacy key heads alias onto the normalized family
+    stats.record("mm:predicated:1")
+    assert stats.counts()["gemm:predicated:1"] == 2
+
+
+def test_launch_geometry_matches_dispatch_contract():
+    s = GemmSpec(block=(8, 8, 16), groups=3, schedule="compact")
+    g = s.launch_geometry(33, 17, 25)           # ni=5, nk=3, nj=2
+    assert g["padded"] == (3, 40, 24, 32)
+    assert g["queue_capacity"] == 3 * 5 * 2
+    assert g["grid"] == (30, 3)
+    assert g["fallback_grid"] == (3, 5, 2, 3)
+    s2 = s.with_(schedule="predicated", groups=1)
+    assert s2.launch_geometry(33, 17, 25)["grid"] == (1, 5, 2, 3)
+    assert s.with_(schedule="dense").launch_geometry(33, 17, 25)["grid"] == ()

@@ -126,8 +126,11 @@ def test_grouped_masked_matmul_matches_oracle(compact):
     bmask = jnp.asarray(rng.random((g, kp // bk, np_ // bn)) > 0.2, jnp.int32)
     mult = jnp.asarray(rng.random((g, m, n)) > 0.5, jnp.float32)
 
-    got = kops.grouped_masked_matmul(
-        a, b, om, am, bmask, block=(bm, bk, bn), compact=compact,
+    got = kops.sparse_gemm(
+        a, b, kops.GemmMasks(om, am, bmask),
+        kops.GemmSpec(block=(bm, bk, bn), groups=g,
+                      schedule="compact" if compact else "predicated",
+                      epilogue="sigma_prime"),
         epilogue_mult=mult)
     want = kref.grouped_masked_matmul(
         pad3(a, mp, kp), pad3(b, kp, np_), om, am, bmask,
@@ -151,9 +154,10 @@ def test_grouped_compact_bounded_queue_and_overflow():
                                       bm=bm, bk=bk, bn=bn)
     n_live = int(np.asarray(om).sum())
     for cap in (n_live, max(1, n_live - 2)):
-        got = kops.grouped_masked_matmul(
-            a, b, om, block=(bm, bk, bn), compact=True,
-            max_active_blocks=cap)
+        got = kops.sparse_gemm(
+            a, b, kops.GemmMasks(out=om),
+            kops.GemmSpec(block=(bm, bk, bn), groups=g, schedule="compact",
+                          max_active_blocks=cap))
         np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
 
 

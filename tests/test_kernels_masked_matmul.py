@@ -1,10 +1,16 @@
-"""Per-kernel validation: shape/dtype sweeps, Pallas (interpret) vs ref.py."""
+"""Per-kernel validation: shape/dtype sweeps, Pallas (interpret) vs ref.py.
+
+All cells drive the spec-driven ``sparse_gemm`` entry point (2-D requests
+are the G=1 lowering of the grouped engine); the deprecation-shim and
+bit-exactness-vs-pre-redesign coverage lives in tests/test_gemm_spec.py.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
+from repro.kernels.ops import GemmMasks, GemmSpec
 
 
 def _mk(m, k, n, dtype, sparsity, key=0):
@@ -29,7 +35,7 @@ def test_masked_matmul_sweep(shape, block, dtype):
     a, b, mask = _mk(m, k, n, dtype, 0.5)
     bm, bk, bn = block
     om = ref.block_any_nonzero(jnp.pad(mask, ((0, -m % bm), (0, -n % bn))), bm, bn)
-    got = ops.masked_matmul(a, b, out_mask=om, block=block)
+    got = ops.sparse_gemm(a, b, GemmMasks(out=om), GemmSpec(block=block))
     want = ref.masked_matmul(
         jnp.pad(a, ((0, -m % bm), (0, -k % bk))).astype(jnp.float32),
         jnp.pad(b, ((0, -k % bk), (0, -n % bn))).astype(jnp.float32),
@@ -39,12 +45,13 @@ def test_masked_matmul_sweep(shape, block, dtype):
 
 
 @pytest.mark.parametrize("block", BLOCKS)
-@pytest.mark.parametrize("compact", [False, True])
-def test_relu_bwd_masked_exact(block, compact):
+@pytest.mark.parametrize("schedule", ["predicated", "compact"])
+def test_relu_bwd_masked_exact(block, schedule):
     """The paper's core op: (dy @ Wᵀ) ⊙ σ'(z) with skipping == dense."""
     m, k, n = 40, 24, 48
     dy, w, mask = _mk(m, k, n, jnp.float32, 0.6, key=3)
-    got = ops.relu_bwd_masked(dy, w, mask, block=block, compact=compact)
+    got = ops.relu_bwd_masked(
+        dy, w, mask, spec=GemmSpec(block=block, schedule=schedule))
     want = ref.relu_bwd_masked(dy, w, mask, bm=block[0], bk=block[1],
                                bn=block[2])
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
@@ -58,7 +65,8 @@ def test_input_sparsity_skip_is_exact():
     a, b, _ = _mk(m, k, n, jnp.float32, 0.0, key=5)
     a = a.at[:16].set(0.0)  # entire block row zero
     am = ref.block_any_nonzero(a, 16, 16)
-    got = ops.masked_matmul(a, b, a_mask=am, block=(16, 16, 16))
+    got = ops.sparse_gemm(a, b, GemmMasks(a=am),
+                          GemmSpec(block=(16, 16, 16)))
     np.testing.assert_allclose(got, a @ b, rtol=1e-5, atol=1e-5)
 
 
@@ -69,7 +77,7 @@ def test_weight_grad_masked_both_operands():
     dy = jnp.asarray(np.random.default_rng(8).standard_normal((64, 32)),
                      jnp.float32)
     dy = dy * (jnp.abs(dy) > 0.5)
-    got = ops.weight_grad_masked(x.T, dy, block=(16, 16, 16))
+    got = ops.weight_grad_masked(x.T, dy, spec=GemmSpec(block=(16, 16, 16)))
     np.testing.assert_allclose(got, x.T @ dy, rtol=1e-4, atol=1e-4)
 
 
@@ -92,8 +100,10 @@ def test_compact_queue_matches_predicated():
     m, k, n = 64, 32, 64
     a, b, mask = _mk(m, k, n, jnp.float32, 0.7, key=13)
     bm = ref.block_any_nonzero(mask, 16, 16)
-    r1 = ops.masked_matmul(a, b, out_mask=bm, block=(16, 16, 16), compact=False)
-    r2 = ops.masked_matmul(a, b, out_mask=bm, block=(16, 16, 16), compact=True)
+    spec = GemmSpec(block=(16, 16, 16))
+    r1 = ops.sparse_gemm(a, b, GemmMasks(out=bm), spec)
+    r2 = ops.sparse_gemm(a, b, GemmMasks(out=bm),
+                         spec.with_(schedule="compact"))
     np.testing.assert_allclose(r1, r2, rtol=1e-6, atol=1e-6)
 
 
@@ -103,8 +113,10 @@ def test_compact_capacity_bound():
     a, b, mask = _mk(m, k, n, jnp.float32, 0.8, key=17)
     bmap = ref.block_any_nonzero(mask, 8, 8)
     n_active = int(np.asarray(bmap).sum())
-    got = ops.masked_matmul(a, b, out_mask=bmap, block=(8, 8, 8),
-                            compact=True, max_active_blocks=n_active)
+    got = ops.sparse_gemm(
+        a, b, GemmMasks(out=bmap),
+        GemmSpec(block=(8, 8, 8), schedule="compact",
+                 max_active_blocks=n_active))
     want = ref.masked_matmul(a, b, out_mask=bmap, bm=8, bk=8, bn=8)
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
 
@@ -117,24 +129,27 @@ def test_compact_queue_overflow_falls_back_exact():
     m = n = k = 32
     a, b, _ = _mk(m, k, n, jnp.float32, 0.0, key=19)   # fully dense
     bmap = jnp.ones((4, 4), jnp.int32)                 # 16 live tiles
-    got = ops.masked_matmul(a, b, out_mask=bmap, block=(8, 8, 8),
-                            compact=True, max_active_blocks=3)  # cap 3 < 16
+    spec = GemmSpec(block=(8, 8, 8), schedule="compact",
+                    max_active_blocks=3)               # cap 3 < 16
+    got = ops.sparse_gemm(a, b, GemmMasks(out=bmap), spec)
     np.testing.assert_allclose(got, a @ b, rtol=1e-5, atol=1e-5)
     # ...and under jit (the overflow check is a traced-value cond)
-    f = jax.jit(lambda a, b: ops.masked_matmul(
-        a, b, out_mask=bmap, block=(8, 8, 8), compact=True,
-        max_active_blocks=3, interpret=True))
+    f = jax.jit(lambda a, b: ops.sparse_gemm(
+        a, b, GemmMasks(out=bmap), spec.with_(interpret=True)))
     np.testing.assert_allclose(f(a, b), a @ b, rtol=1e-5, atol=1e-5)
 
 
-@pytest.mark.parametrize("compact", [False, True])
-def test_epilogue_mult_fused_matches_oracle(compact):
+@pytest.mark.parametrize("schedule", ["predicated", "compact"])
+def test_epilogue_mult_fused_matches_oracle(schedule):
     """The σ'-Hadamard epilogue inside the kernel == separate multiply."""
     m, k, n = 40, 24, 48
     a, b, mask = _mk(m, k, n, jnp.float32, 0.6, key=23)
     om = ref.block_any_nonzero(mask, 8, 16)
-    got = ops.masked_matmul(a, b, out_mask=om, block=(8, 8, 16),
-                            compact=compact, epilogue_mult=mask)
+    got = ops.sparse_gemm(
+        a, b, GemmMasks(out=om),
+        GemmSpec(block=(8, 8, 16), schedule=schedule,
+                 epilogue="sigma_prime"),
+        epilogue_mult=mask)
     want = ref.masked_matmul(a, b, out_mask=om, bm=8, bk=8, bn=16,
                              epilogue_mult=mask)
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)

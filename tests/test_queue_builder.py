@@ -18,6 +18,7 @@ from repro.core import policy as pol
 from repro.core.sparse_linear import relu_matmul
 from repro.core.workredist import static_queue_order, wdu_dispatch_order
 from repro.kernels import ops, ref, stats
+from repro.kernels.ops import GemmMasks, GemmSpec
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -76,17 +77,19 @@ def test_reference_order_is_the_wdu_dispatch_rule():
 
 
 def test_compact_default_policy_builds_queue_with_zero_argsorts():
-    """ACCEPTANCE: matmul(compact=True) constructs its queue with zero
-    argsort calls on the default (prefix_sum) policy — asserted via the
+    """ACCEPTANCE: the compact schedule constructs its queue with zero
+    argsort calls on the default (prefix_sum) spec — asserted via the
     kernels.stats counter."""
     rng = np.random.default_rng(0)
     a = jnp.asarray(rng.standard_normal((32, 16)), jnp.float32)
     b = jnp.asarray(rng.standard_normal((16, 32)), jnp.float32)
     om = jnp.asarray(rng.random((4, 4)) > 0.5, jnp.int32)
     stats.reset()
-    out = ops.masked_matmul(a, b, out_mask=om, block=(8, 8, 8), compact=True)
+    out = ops.sparse_gemm(a, b, GemmMasks(out=om),
+                          GemmSpec(block=(8, 8, 8), schedule="compact"))
     assert stats.queue_builds("argsort") == 0, stats.counts()
     assert stats.queue_builds("prefix_sum") == 1, stats.counts()
+    assert stats.gemm_launches(schedule="compact", groups=1) == 1
     want = ref.masked_matmul(a, b, out_mask=om, bm=8, bk=8, bn=8)
     np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
 
@@ -111,10 +114,11 @@ def test_compact_matmul_same_result_for_both_builders(builder):
     b = jnp.asarray(rng.standard_normal((24, 48)), jnp.float32)
     mask = (rng.random((40, 48)) > 0.6).astype(np.float32)
     om = ref.block_any_nonzero(jnp.asarray(mask), 8, 16)
-    got = ops.masked_matmul(a, b, out_mask=om, block=(8, 8, 16),
-                            compact=True, queue_builder=builder)
-    want = ops.masked_matmul(a, b, out_mask=om, block=(8, 8, 16),
-                             compact=False)
+    spec = GemmSpec(block=(8, 8, 16))
+    got = ops.sparse_gemm(
+        a, b, GemmMasks(out=om),
+        spec.with_(schedule="compact", queue_builder=builder))
+    want = ops.sparse_gemm(a, b, GemmMasks(out=om), spec)
     np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
 
 
@@ -126,16 +130,15 @@ def test_overflow_falls_back_bit_exactly_to_predicated(builder):
     a = jnp.asarray(rng.standard_normal((32, 16)), jnp.float32)
     b = jnp.asarray(rng.standard_normal((16, 32)), jnp.float32)
     om = jnp.ones((4, 4), jnp.int32)                  # 16 live tiles
-    got = ops.masked_matmul(a, b, out_mask=om, block=(8, 8, 8),
-                            compact=True, max_active_blocks=3,
-                            queue_builder=builder)
-    predicated = ops.masked_matmul(a, b, out_mask=om, block=(8, 8, 8),
-                                   compact=False)
+    spec = GemmSpec(block=(8, 8, 8), schedule="compact",
+                    max_active_blocks=3, queue_builder=builder)
+    got = ops.sparse_gemm(a, b, GemmMasks(out=om), spec)
+    predicated = ops.sparse_gemm(a, b, GemmMasks(out=om),
+                                 GemmSpec(block=(8, 8, 8)))
     np.testing.assert_array_equal(np.asarray(got), np.asarray(predicated))
     # ...and under jit, where the live count is a traced value
-    f = jax.jit(lambda a, b: ops.masked_matmul(
-        a, b, out_mask=om, block=(8, 8, 8), compact=True,
-        max_active_blocks=3, queue_builder=builder, interpret=True))
+    f = jax.jit(lambda a, b: ops.sparse_gemm(
+        a, b, GemmMasks(out=om), spec.with_(interpret=True)))
     np.testing.assert_array_equal(np.asarray(f(a, b)), np.asarray(predicated))
 
 
@@ -200,8 +203,8 @@ if HAS_HYPOTHESIS:
         mask = (rng.random((m, n)) < dens).astype(np.float32)
         mp = jnp.asarray(np.pad(mask, ((0, -m % 8), (0, -n % 8))))
         om = ref.block_any_nonzero(mp, 8, 8)
-        got = ops.masked_matmul(a, b, out_mask=om, block=(8, 8, 8),
-                                compact=True)
+        got = ops.sparse_gemm(a, b, GemmMasks(out=om),
+                              GemmSpec(block=(8, 8, 8), schedule="compact"))
         want = (np.asarray(a) @ np.asarray(b)) * \
             np.asarray(ref.expand_block_mask(om, 8, 8))[:m, :n]
         np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
@@ -217,10 +220,11 @@ if HAS_HYPOTHESIS:
         rng = np.random.default_rng(seed)
         a = jnp.asarray(rng.standard_normal((mb * 8, 8)), jnp.float32)
         b = jnp.asarray(rng.standard_normal((8, nb * 8)), jnp.float32)
-        got = ops.masked_matmul(a, b, out_mask=jnp.asarray(bm),
-                                block=(8, 8, 8), compact=True,
-                                max_active_blocks=cap)
-        predicated = ops.masked_matmul(a, b, out_mask=jnp.asarray(bm),
-                                       block=(8, 8, 8), compact=False)
+        got = ops.sparse_gemm(
+            a, b, GemmMasks(out=jnp.asarray(bm)),
+            GemmSpec(block=(8, 8, 8), schedule="compact",
+                     max_active_blocks=cap))
+        predicated = ops.sparse_gemm(a, b, GemmMasks(out=jnp.asarray(bm)),
+                                     GemmSpec(block=(8, 8, 8)))
         np.testing.assert_array_equal(np.asarray(got),
                                       np.asarray(predicated))

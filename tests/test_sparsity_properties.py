@@ -63,7 +63,8 @@ def test_masked_matmul_matches_oracle(a, bmat, blk):
     mask = jnp.asarray(rng.random((m, n)) > 0.5, jnp.float32)
     mp = jnp.pad(mask, ((0, -m % blk), (0, -n % blk)))
     om = ref.block_any_nonzero(mp, blk, blk)
-    got = ops.masked_matmul(a, bmat, out_mask=om, block=(blk, blk, blk))
+    got = ops.sparse_gemm(a, bmat, ops.GemmMasks(out=om),
+                          ops.GemmSpec(block=(blk, blk, blk)))
     want = np.asarray(a, np.float32) @ np.asarray(bmat, np.float32)
     want = want * np.asarray(ref.expand_block_mask(om, blk, blk))[:m, :n]
     np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
