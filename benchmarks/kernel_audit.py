@@ -211,6 +211,7 @@ def bitmap_op_audit() -> Tuple[List[dict], str]:
     wc = jnp.asarray(rng.standard_normal((3, 3, 8, 8)), jnp.float32)
 
     def dense_conv(x, w):
+        # dense reference oracle  # repro-lint: allow(CONV_FALLBACK)
         y = jax.lax.conv_general_dilated(
             jnp.maximum(x, 0), w, (1, 1), "SAME",
             dimension_numbers=("NHWC", "HWIO", "NHWC"))
@@ -226,6 +227,7 @@ def bitmap_op_audit() -> Tuple[List[dict], str]:
     wg2 = jnp.asarray(rng.standard_normal((3, 3, 4, 8)), jnp.float32)
 
     def dense_grouped(x, w):
+        # dense reference oracle  # repro-lint: allow(CONV_FALLBACK)
         y = jax.lax.conv_general_dilated(
             jnp.maximum(x, 0), w, (1, 1), "SAME",
             dimension_numbers=("NHWC", "HWIO", "NHWC"),
@@ -241,6 +243,7 @@ def bitmap_op_audit() -> Tuple[List[dict], str]:
     wdw = jnp.asarray(rng.standard_normal((3, 3, 1, 8)), jnp.float32)
 
     def dense_dw(x, w):
+        # dense reference oracle  # repro-lint: allow(CONV_FALLBACK)
         y = jax.lax.conv_general_dilated(
             jnp.maximum(x, 0), w, (1, 1), "SAME",
             dimension_numbers=("NHWC", "HWIO", "NHWC"),
@@ -384,6 +387,7 @@ def depthwise_audit() -> Tuple[List[dict], str]:
                                       groups=groups) ** 2).sum()
 
                 def g(x, w):
+                    # dense reference oracle  # repro-lint: allow(CONV_FALLBACK)
                     y = jax.lax.conv_general_dilated(
                         jnp.maximum(x, 0), w, (stride, stride), padding,
                         dimension_numbers=("NHWC", "HWIO", "NHWC"),
@@ -424,3 +428,42 @@ def depthwise_audit() -> Tuple[List[dict], str]:
     return rows, (
         f"dense_fallbacks={fallbacks} dw_layers={n_dw} "
         f"grouped_grads_exact={all_exact} finite={finite}")
+
+
+def contract_audit() -> Tuple[List[dict], str]:
+    """Static bitmap-contract verifier as a results table: one row per
+    checker×workload with its violation count — the same rows
+    ``python -m repro.analysis`` gates CI on (docs/static_analysis.md).
+    All counts must be zero on main; any violation fails the table."""
+    from repro.analysis import jaxpr_audit, lint
+    from repro.analysis import kernel_sanitizer as ks
+
+    rows: List[dict] = []
+    all_violations = []
+
+    for name in sorted(jaxpr_audit.WORKLOADS):
+        vs = jaxpr_audit.audit_fn(jaxpr_audit.WORKLOADS[name](),
+                                  workload=name)
+        all_violations += vs
+        rows.append({"checker": "jaxpr", "workload": name,
+                     "violations": len(vs),
+                     "codes": ";".join(sorted({v.code for v in vs})) or "-"})
+
+    vs = ks.sanitize_all()
+    all_violations += vs
+    rows.append({"checker": "kernel", "workload": "sweep",
+                 "violations": len(vs),
+                 "codes": ";".join(sorted({v.code for v in vs})) or "-"})
+
+    root = os.path.join(os.path.dirname(__file__), "..")
+    roots = [p for r in ("src", "benchmarks", "examples")
+             if os.path.isdir(p := os.path.join(root, r))]
+    vs = lint.lint_paths(roots)
+    all_violations += vs
+    rows.append({"checker": "lint", "workload": "repo",
+                 "violations": len(vs),
+                 "codes": ";".join(sorted({v.code for v in vs})) or "-"})
+
+    assert not all_violations, \
+        [f"{v.checker}:{v.code}@{v.where}" for v in all_violations]
+    return rows, f"checkers=3 rows={len(rows)} violations=0"

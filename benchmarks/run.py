@@ -16,8 +16,8 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 def main() -> None:
     from benchmarks.figures import ALL_FIGURES
     from benchmarks.kernel_audit import (
-        bitmap_op_audit, depthwise_audit, kernel_audit, launch_shape_audit,
-        queue_cost_audit)
+        bitmap_op_audit, contract_audit, depthwise_audit, kernel_audit,
+        launch_shape_audit, queue_cost_audit)
     from benchmarks.roofline import roofline_rows
 
     benches = dict(ALL_FIGURES)
@@ -26,6 +26,7 @@ def main() -> None:
     benches["queue_cost_audit"] = queue_cost_audit
     benches["launch_shape_audit"] = launch_shape_audit
     benches["depthwise_audit"] = depthwise_audit
+    benches["contract_audit"] = contract_audit
     benches["roofline_table"] = roofline_rows
 
     only = sys.argv[1:]

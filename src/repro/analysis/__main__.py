@@ -1,0 +1,78 @@
+"""CLI entry point: ``python -m repro.analysis [--fail-on-violation] ...``.
+
+Runs the full verifier — jaxpr lifecycle audit over the standard workloads,
+the kernel sanitizer sweep, and the repo lint — and prints one combined
+violation table.  ``--json`` / ``--csv`` write the same rows as artifacts
+(what CI uploads); ``--fail-on-violation`` makes any row exit 1.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+from . import jaxpr_audit, kernel_sanitizer, lint, report
+
+# Directories lint sweeps by default: everything that CALLS the kernels.
+# tests/ is excluded — the frozen-reference suites pin the deprecated shims
+# against sparse_gemm on purpose (docs/gemm_api.md).
+LINT_ROOTS = ("src", "benchmarks", "examples")
+
+
+def _repo_root() -> str:
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.dirname(os.path.dirname(os.path.dirname(here)))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static bitmap-contract verifier (jaxpr + kernel + lint)")
+    ap.add_argument("--fail-on-violation", action="store_true",
+                    help="exit 1 if any checker reports a violation")
+    ap.add_argument("--workloads", nargs="*", default=None,
+                    metavar="NAME",
+                    help=f"jaxpr workloads (default: all of "
+                         f"{sorted(jaxpr_audit.WORKLOADS)})")
+    ap.add_argument("--skip", nargs="*", default=[],
+                    choices=["jaxpr", "kernel", "lint"],
+                    help="checkers to skip")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the violation rows as JSON")
+    ap.add_argument("--csv", metavar="PATH", default=None,
+                    help="write the violation rows as CSV")
+    args = ap.parse_args(argv)
+
+    violations = []
+    for name, run in [
+        ("jaxpr", lambda: jaxpr_audit.audit_workloads(args.workloads)),
+        ("kernel", kernel_sanitizer.sanitize_all),
+        ("lint", lambda: lint.lint_paths(
+            [p for r in LINT_ROOTS
+             if os.path.isdir(p := os.path.join(_repo_root(), r))])),
+    ]:
+        if name in args.skip:
+            print(f"[analysis] {name}: skipped")
+            continue
+        t0 = time.time()
+        vs = run()
+        violations += vs
+        print(f"[analysis] {name}: {len(vs)} violation(s) "
+              f"({time.time() - t0:.1f}s)")
+
+    print()
+    print(report.format_table(violations, title="contract violations"))
+    if args.json:
+        with open(args.json, "w", encoding="utf-8") as f:
+            f.write(report.to_json(violations))
+    if args.csv:
+        with open(args.csv, "w", encoding="utf-8") as f:
+            f.write(report.to_csv(violations))
+    if violations and args.fail_on_violation:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

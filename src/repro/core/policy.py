@@ -115,6 +115,7 @@ class SparsityPolicy:
             max_active_blocks=max_active_blocks,
             out_dtype=out_dtype,
             interpret=self.interpret,
+            origin="policy",
         )
 
 

@@ -63,6 +63,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops as kops
+from repro.kernels import stats
 from repro.kernels.shapes import block_bitmap as _bitmap_padded
 from .policy import SparsityPolicy
 from .sparse_linear import _mm, _needs_act_bitmap, _needs_grad_bitmap
@@ -177,10 +178,11 @@ def _patch_bitmap(st: SparseTensor, spatial: Tuple[int, int, int, int],
     touched."""
     n, h, w, c = spatial
     gc = st.gran[1]
-    fb4 = st.bitmap.reshape(n, h, w, c // gc)
-    pb = _im2col(fb4, r, s, stride, pad)       # (N, U, V, R*S*C/gc)
-    u, v = pb.shape[1], pb.shape[2]
-    return SparseTensor(None, pb.reshape(n * u * v, -1), (1, gc))
+    with stats.lifecycle_scope("derive", "im2col"):
+        fb4 = st.bitmap.reshape(n, h, w, c // gc)
+        pb = _im2col(fb4, r, s, stride, pad)   # (N, U, V, R*S*C/gc)
+        u, v = pb.shape[1], pb.shape[2]
+        return SparseTensor(None, pb.reshape(n * u * v, -1), (1, gc))
 
 
 def _encode_conv_act(x_pre: jnp.ndarray, policy: SparsityPolicy,
@@ -339,9 +341,10 @@ def _conv_engine_bwd(stride, padding, policy: SparsityPolicy,
     # space — mirrors exactly what the data underwent.
     gpb2 = None
     if st_dy.bitmap is not None:
-        gfb4 = st_dy.bitmap.reshape(n, u, v, m // gcg)
-        gpb = _im2col(_dilate_hw(gfb4, stride), r, s, 1, gpad4)
-        gpb2 = gpb.reshape(n * h * wd, -1)
+        with stats.lifecycle_scope("derive", "grad_patches"):
+            gfb4 = st_dy.bitmap.reshape(n, u, v, m // gcg)
+            gpb = _im2col(_dilate_hw(gfb4, stride), r, s, 1, gpad4)
+            gpb2 = gpb.reshape(n * h * wd, -1)
     mask2d = relu_mask.reshape(n * h * wd, c).astype(jnp.float32) \
         if fused_relu else None
 

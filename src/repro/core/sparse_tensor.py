@@ -57,19 +57,20 @@ def coarsen_bitmap(bitmap: jnp.ndarray, gran: Tuple[int, int],
     b0, b1 = block
     assert b0 % gr == 0 and b1 % gc == 0, (gran, block)
     f0, f1 = b0 // gr, b1 // gc
-    if bitmap.ndim == 3:
-        g, r, c = bitmap.shape
+    with stats.lifecycle_scope("derive", "coarsen"):
+        if bitmap.ndim == 3:
+            g, r, c = bitmap.shape
+            rp, cp = _ceil_div(r, f0) * f0, _ceil_div(c, f1) * f1
+            if rp != r or cp != c:
+                bitmap = jnp.pad(bitmap, ((0, 0), (0, rp - r), (0, cp - c)))
+            return bitmap.reshape(g, rp // f0, f0, cp // f1, f1) \
+                .max(axis=(2, 4)).astype(jnp.int32)
+        r, c = bitmap.shape
         rp, cp = _ceil_div(r, f0) * f0, _ceil_div(c, f1) * f1
         if rp != r or cp != c:
-            bitmap = jnp.pad(bitmap, ((0, 0), (0, rp - r), (0, cp - c)))
-        return bitmap.reshape(g, rp // f0, f0, cp // f1, f1) \
-            .max(axis=(2, 4)).astype(jnp.int32)
-    r, c = bitmap.shape
-    rp, cp = _ceil_div(r, f0) * f0, _ceil_div(c, f1) * f1
-    if rp != r or cp != c:
-        bitmap = jnp.pad(bitmap, ((0, rp - r), (0, cp - c)))
-    return bitmap.reshape(rp // f0, f0, cp // f1, f1).max(axis=(1, 3)) \
-        .astype(jnp.int32)
+            bitmap = jnp.pad(bitmap, ((0, rp - r), (0, cp - c)))
+        return bitmap.reshape(rp // f0, f0, cp // f1, f1).max(axis=(1, 3)) \
+            .astype(jnp.int32)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -176,7 +177,8 @@ def scan_bitmap(x2d: jnp.ndarray, gran: Tuple[int, int],
     gr, gc = gran
     m, n = x2d.shape
     mp, np_ = _ceil_div(m, gr) * gr, _ceil_div(n, gc) * gc
-    if mp != m or np_ != n:
-        x2d = jnp.pad(x2d, ((0, mp - m), (0, np_ - n)))
     stats.record(f"scan:{kind}")
-    return kref.block_any_nonzero(x2d.astype(jnp.float32), gr, gc)
+    with stats.lifecycle_scope("scan", kind):
+        if mp != m or np_ != n:
+            x2d = jnp.pad(x2d, ((0, mp - m), (0, np_ - n)))
+        return kref.block_any_nonzero(x2d.astype(jnp.float32), gr, gc)

@@ -32,9 +32,10 @@ dispatch is counted by ``kernels.stats`` under ``gemm:<schedule>:<g>``.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import warnings
-from typing import Any, NamedTuple, Optional, Sequence, Tuple, Union
+from typing import Any, List, NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -117,6 +118,13 @@ class GemmSpec:
 
     max_active_blocks: compact-queue capacity (None → all tiles, which
     provably cannot overflow).  interpret: None → auto (CPU ⇒ True).
+
+    origin records WHO resolved the spec — ``"policy"`` when it came out of
+    ``SparsityPolicy.gemm_spec()`` (the one sanctioned resolution point),
+    ``"adhoc"`` otherwise.  It is provenance metadata for the static
+    analyzer's SPEC_UNRESOLVED check, deliberately excluded from eq/hash so
+    a policy-resolved spec and its ad-hoc twin stay interchangeable as jit
+    cache keys.
     """
     block: Tuple[int, int, int] = DEFAULT_BLOCK
     groups: int = 1
@@ -126,6 +134,7 @@ class GemmSpec:
     max_active_blocks: Optional[int] = None
     out_dtype: Any = jnp.float32
     interpret: Optional[bool] = None
+    origin: str = dataclasses.field(default="adhoc", compare=False)
 
     def __post_init__(self):
         if self.schedule not in SCHEDULES:
@@ -191,6 +200,26 @@ def _as_masks(masks: MasksLike) -> GemmMasks:
 # The dispatcher — the ONE pad/queue/overflow-fallback/scatter implementation
 # ---------------------------------------------------------------------------
 
+# Trace-time dispatch events for the static analyzer's SPEC_UNRESOLVED
+# check: while a ``collect_gemm_events()`` context is active, every
+# ``sparse_gemm`` dispatch appends its spec here.  Tracing is single-
+# threaded per process, so a plain module slot (not a contextvar) is enough.
+_GEMM_EVENTS: Optional[List[GemmSpec]] = None
+
+
+@contextlib.contextmanager
+def collect_gemm_events():
+    """Record every ``sparse_gemm`` dispatch (its ``GemmSpec``) traced or
+    executed inside the context — the audit traces a model step under this
+    and then asserts each spec's provenance (``origin == "policy"``)."""
+    global _GEMM_EVENTS
+    prev, _GEMM_EVENTS = _GEMM_EVENTS, []
+    try:
+        yield _GEMM_EVENTS
+    finally:
+        _GEMM_EVENTS = prev
+
+
 def sparse_gemm(
     a: jnp.ndarray,
     b: jnp.ndarray,
@@ -233,7 +262,10 @@ def sparse_gemm(
                 f"{spec.groups}")
         a3, b3, mult3 = a, b, epilogue_mult
     stats.record(spec.stats_key)
-    out = _dispatch(a3, b3, masks, spec, mult3)
+    if _GEMM_EVENTS is not None:
+        _GEMM_EVENTS.append(spec)
+    with stats.lifecycle_scope("gemm", f"{spec.schedule}:{spec.groups}"):
+        out = _dispatch(a3, b3, masks, spec, mult3)
     return out[0] if not grouped_in else out
 
 
@@ -423,11 +455,12 @@ def bitmap_scan(
     bm, bn = block
     lr = bm * max(1, -(-8 // bm))
     mp, np_ = ceil_to(m, lr), ceil_to(n, bn)
-    x_p = pad_to(x, mp, np_)
     stats.record(f"scan_pallas:{kind}")
-    bitmap = bitmap_scan_kernel(x_p, bm=bm, bn=bn, lr=lr, lc=np_,
-                                interpret=_use_interpret(interpret))
-    return bitmap[: ceil_to(m, bm) // bm, :]
+    with stats.lifecycle_scope("scan", kind):
+        x_p = pad_to(x, mp, np_)
+        bitmap = bitmap_scan_kernel(x_p, bm=bm, bn=bn, lr=lr, lc=np_,
+                                    interpret=_use_interpret(interpret))
+        return bitmap[: ceil_to(m, bm) // bm, :]
 
 
 def relu_encode(
@@ -451,11 +484,12 @@ def relu_encode(
     # Launch slab: a multiple of the bitmap granularity covering >=8 rows.
     lr = bm * max(1, -(-8 // bm))
     mp, np_ = ceil_to(m, lr), ceil_to(n, bn)
-    z_p = pad_to(z, mp, np_)
     stats.record("encode:act")
-    y, bitmap = relu_encode_kernel(z_p, bm=bm, bn=bn, lr=lr, lc=np_,
-                                   interpret=_use_interpret(interpret))
-    return y[:m, :n], bitmap[: ceil_to(m, bm) // bm, :]
+    with stats.lifecycle_scope("encode", "act"):
+        z_p = pad_to(z, mp, np_)
+        y, bitmap = relu_encode_kernel(z_p, bm=bm, bn=bn, lr=lr, lc=np_,
+                                       interpret=_use_interpret(interpret))
+        return y[:m, :n], bitmap[: ceil_to(m, bm) // bm, :]
 
 
 # ---------------------------------------------------------------------------

@@ -186,18 +186,21 @@ def build_queue(
     mb, nb = bitmap.shape
     stats.record(f"queue:{builder}")
     if builder == "argsort":
-        flat = bitmap.reshape(-1)
-        order = _stable_argsort_desc(flat)[:capacity]
-        if order.shape[0] < capacity:           # capacity may exceed T
-            order = jnp.pad(order, (0, capacity - order.shape[0]))
-        ii = (order // nb).astype(jnp.int32)
-        jj = (order % nb).astype(jnp.int32)
-        # Dead slots must carry valid (in-range) coords for the consumer's
-        # gathers; zero them like the prefix-sum builder does.
-        live = jnp.arange(capacity) < flat.sum()
-        ii = jnp.where(live, ii, 0)
-        jj = jnp.where(live, jj, 0)
-        return ii, jj, flat.sum().reshape(1)
+        with stats.lifecycle_scope("queue", builder):
+            flat = bitmap.reshape(-1)
+            order = _stable_argsort_desc(flat)[:capacity]
+            if order.shape[0] < capacity:       # capacity may exceed T
+                order = jnp.pad(order, (0, capacity - order.shape[0]))
+            ii = (order // nb).astype(jnp.int32)
+            jj = (order % nb).astype(jnp.int32)
+            # Dead slots must carry valid (in-range) coords for the
+            # consumer's gathers; zero them like the prefix-sum builder.
+            live = jnp.arange(capacity) < flat.sum()
+            ii = jnp.where(live, ii, 0)
+            jj = jnp.where(live, jj, 0)
+            return ii, jj, flat.sum().reshape(1)
     if builder != "prefix_sum":
         raise ValueError(f"unknown queue builder: {builder!r}")
-    return build_queue_kernel(bitmap, capacity=capacity, interpret=interpret)
+    with stats.lifecycle_scope("queue", builder):
+        return build_queue_kernel(bitmap, capacity=capacity,
+                                  interpret=interpret)

@@ -30,7 +30,10 @@ from __future__ import annotations
 
 import collections
 import contextlib
+import itertools
 from typing import Dict, Optional
+
+import jax
 
 _COUNTS: "collections.Counter[str]" = collections.Counter()
 
@@ -107,3 +110,48 @@ def counting():
         yield counts
     finally:
         pass
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle scopes — the static (jaxpr-visible) twin of the counters above
+# ---------------------------------------------------------------------------
+#
+# Counters audit a trace that RAN.  ``analysis/jaxpr_audit.py`` proves the
+# same lifecycle contract on any program WITHOUT running it, by walking the
+# jaxpr's ``eqn.source_info.name_stack``.  For that, every bitmap event must
+# leave a machine-readable tag in the traced program, which ``jax.named_scope``
+# provides: scope names survive tracing, jvp and transposition (they reappear
+# wrapped as ``jvp(tag)`` / ``transpose(jvp(tag))``).
+#
+# Tag grammar (parsed by analysis.jaxpr_audit.parse_tag):
+#
+#     repro:<kind>[:<detail>]:<seq>
+#
+# kind ∈ {encode, scan, derive, queue, gemm, fallback} — mirroring the
+# counter families.  <seq> is a process-global instance number so two scans
+# of the SAME tensor get DISTINCT region identities (that duplication is
+# exactly the violation the audit must be able to see).  Model layers use
+# the separate ``layer:<name>`` grammar (``layer_scope``) purely for keying
+# violation reports by layer.
+
+_SCOPE_SEQ = itertools.count()
+
+
+def lifecycle_scope(kind: str, detail: str = ""):
+    """A ``jax.named_scope`` carrying one bitmap-lifecycle event tag.
+
+    Wrap the ops that *compute* sparsity metadata (kind="encode"/"scan"),
+    *derive* it (kind="derive"), build work queues (kind="queue"), consume
+    it in a GEMM dispatch (kind="gemm"), or escape the engine entirely
+    (kind="fallback").  ``detail`` refines the kind (e.g. the scan target,
+    the gemm ``<schedule>:<g>`` launch key).
+    """
+    parts = ["repro", kind] + ([detail] if detail else []) \
+        + [str(next(_SCOPE_SEQ))]
+    return jax.named_scope(":".join(parts))
+
+
+def layer_scope(name: str):
+    """A ``jax.named_scope`` keying everything under it to one model layer —
+    the audit uses it only to label violations (``layer:<name>``)."""
+    return jax.named_scope(f"layer:{name}")

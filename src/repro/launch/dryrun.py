@@ -347,10 +347,13 @@ def main() -> None:
                                 shard_stash=args.shard_stash,
                                 tag=args.tag)
                             r = rec["roofline"]
+                            live_gib = rec.get("memory", {}) \
+                                .get("live_bytes", 0) / 2**30
+                            rf = r["roofline_fraction"]
                             print(f"[ok]   {tag}: compile={rec['compile_s']}s "
-                                  f"live={rec.get('memory', {}).get('live_bytes', 0)/2**30:.2f}GiB "
+                                  f"live={live_gib:.2f}GiB "
                                   f"dominant={r['dominant']} "
-                                  f"rf={r['roofline_fraction'] and round(r['roofline_fraction'], 3)}")
+                                  f"rf={rf and round(rf, 3)}")
                             n_ok += 1
                         except Exception as e:
                             rec = {"arch": arch, "shape": shape.name,

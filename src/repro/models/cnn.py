@@ -100,13 +100,15 @@ def apply_conv(p: Params, x_pre: jnp.ndarray, node: ConvNode,
     if node.depthwise:
         if p["w"].shape[2] != 1 or x_pre.shape[-1] != p["w"].shape[3]:
             # Defensive escape hatch for malformed group structure; counted
-            # so the audit can assert the sparse path never loses a layer.
+            # (and scope-tagged for the static analyzer) so audits can
+            # assert the sparse path never loses a layer.
             stats.record("conv:dense_fallback")
-            x = jnp.maximum(x_pre, 0) if input_is_relu else x_pre
-            y = jax.lax.conv_general_dilated(
-                x, p["w"], (node.stride, node.stride), node.padding,
-                dimension_numbers=("NHWC", "HWIO", "NHWC"),
-                feature_group_count=x.shape[-1])
+            with stats.lifecycle_scope("fallback", "conv_dense"):
+                x = jnp.maximum(x_pre, 0) if input_is_relu else x_pre
+                y = jax.lax.conv_general_dilated(
+                    x, p["w"], (node.stride, node.stride), node.padding,
+                    dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                    feature_group_count=x.shape[-1])
         elif input_is_relu:
             # depthwise through the sparse unit: groups == C, fused encode —
             # the dw→pw chain keeps the pre-activation contract end to end.
@@ -272,8 +274,9 @@ class CNNModel:
             # x is raw input if not input_is_relu, else PRE-activation
             for node in nodes:
                 if isinstance(node, ConvNode):
-                    x = apply_conv(params[node.name], x, node, policy,
-                                   input_is_relu)
+                    with stats.layer_scope(node.name):
+                        x = apply_conv(params[node.name], x, node, policy,
+                                       input_is_relu)
                     input_is_relu = node.relu_after
                     if capture is not None:
                         capture[node.name] = jnp.maximum(x, 0) \
@@ -311,7 +314,8 @@ class CNNModel:
         # its bitmap is computed once and threaded to the WG stage, and the
         # incoming logit gradient's masks are shared across both backward
         # GEMMs — same metadata contract as every conv layer.
-        return smatmul(x, params["head"]["w"], policy)
+        with stats.layer_scope("head"):
+            return smatmul(x, params["head"]["w"], policy)
 
     def loss(self, params: Params, images, labels,
              policy: SparsityPolicy = DC) -> jnp.ndarray:

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.core.policy import SparsityPolicy
 from repro.core.sparse_linear import act_matmul, matmul as sparse_matmul
+from repro.kernels import stats
 from .common import activation_fn, dense_init
 
 Params = Dict[str, Any]
@@ -65,8 +66,10 @@ def ffn_apply(params: Params, x: jnp.ndarray, cfg: FFNConfig) -> jnp.ndarray:
         pol = cfg.sparse_policy
         # up-projection: plain sparse matmul (its bwd consumes the sparse
         # hidden gradient → INPUT sparsity), then the paper's fused unit.
-        h_pre = sparse_matmul(x2, params["w_up"], pol)
-        y = act_matmul(h_pre, params["w_down"], pol, cfg.activation)
+        with stats.layer_scope("ffn_up"):
+            h_pre = sparse_matmul(x2, params["w_up"], pol)
+        with stats.layer_scope("ffn_down"):
+            y = act_matmul(h_pre, params["w_down"], pol, cfg.activation)
     else:
         act = activation_fn(cfg.activation)
         y = act(x2 @ params["w_up"]) @ params["w_down"]

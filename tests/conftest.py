@@ -7,3 +7,16 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 # NOTE: deliberately NO --xla_force_host_platform_device_count here — smoke
 # tests and benches must see the real single device (the 512-device override
 # belongs exclusively to launch/dryrun.py, see its module docstring).
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(autouse=True)
+def _reset_stats_counters():
+    """The stats counters are process-global and record at trace time, so
+    any test that traces a sparse op leaks counts into the next test.
+    Reset around every test so counter assertions are order-independent."""
+    from repro.kernels import stats
+    stats.reset()
+    yield
+    stats.reset()

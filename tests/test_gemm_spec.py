@@ -266,3 +266,62 @@ def test_launch_geometry_matches_dispatch_contract():
     s2 = s.with_(schedule="predicated", groups=1)
     assert s2.launch_geometry(33, 17, 25)["grid"] == (1, 5, 2, 3)
     assert s.with_(schedule="dense").launch_geometry(33, 17, 25)["grid"] == ()
+
+
+# ---------------------------------------------------------------------------
+# 5. launch-geometry edge cases: the degenerate shapes real models hit
+# ---------------------------------------------------------------------------
+
+def test_launch_geometry_degenerate_depthwise_k():
+    """Depthwise conv: per-group K = R·S = 9, far below the nominal 128
+    block.  grouped_gemm_block must shrink the K edge to 9 (one K step,
+    per-patch-row masking still live), not pad 14x and mask nothing."""
+    p = pol.IN_OUT_WR.with_(kernel_impl="pallas", block=(128, 128, 128))
+    m, k, n = 64, 9, 8                      # (M, R*S, C_out/G) per group
+    spec = p.gemm_spec(groups=8, dims=(m, k, n))
+    assert spec.block[1] == 9               # degenerate K edge
+    g = spec.launch_geometry(m, k, n)
+    assert g["padded"][2] == 9              # K axis NOT padded to 128
+    assert g["grid"][1] == 1                # nk == 1: a single K step
+    # masking stays live: the queue spans all groups' output tiles
+    assert g["queue_capacity"] == 8 * g["fallback_grid"][1] \
+        * g["fallback_grid"][2]
+
+
+def test_launch_geometry_g1_keeps_leading_group_axis():
+    """G=1 is the 2-D special case but the launch stays a GROUPED launch:
+    the grid keeps its leading group axis of extent 1 (one kernel family,
+    docs/gemm_api.md), and padding only touches the trailing dims."""
+    spec = GemmSpec(block=(8, 8, 8), groups=1, schedule="predicated")
+    g = spec.launch_geometry(12, 20, 8)
+    assert g["grid"] == (1, 2, 1, 3)        # leading axis present, extent 1
+    assert g["padded"] == (1, 16, 24, 8)
+    # compact at G=1: queue capacity counts (1, ni, nj) tiles
+    gc = spec.with_(schedule="compact").launch_geometry(12, 20, 8)
+    assert gc["queue_capacity"] == 1 * 2 * 1
+    assert gc["grid"] == (2, 3)
+    assert gc["fallback_grid"] == (1, 2, 1, 3)
+
+
+def test_exact_capacity_queue_leaves_dump_slot_unused():
+    """n_live == capacity: every queue slot is live, nothing overflows, and
+    the dump slot past the queue stays untouched — proven on the REAL
+    prefix-sum kernel by the sanitizer's shadow write log."""
+    from repro.analysis import kernel_sanitizer as ks
+    from repro.core.workredist import static_queue_order
+
+    bmp = np.ones((4, 4), np.int32)         # 16 live == capacity 16
+    vs, (ii, jj, n_live) = ks.run_queue_builder(
+        bmp, capacity=16, launch_block=4)
+    assert vs == []                         # incl. DUMP_SLOT_LEAK clean
+    ref_ii, ref_jj, ref_n = static_queue_order(bmp, 16)
+    assert n_live == ref_n == 16
+    assert np.array_equal(ii, ref_ii) and np.array_equal(jj, ref_jj)
+
+    # the dispatcher's geometry agrees: exactly-live max_active_blocks
+    # yields a queue of that capacity with the grid sized to it
+    spec = GemmSpec(block=(8, 8, 8), groups=1, schedule="compact",
+                    max_active_blocks=16)
+    g = spec.launch_geometry(32, 16, 32)
+    assert g["queue_capacity"] == 16
+    assert g["grid"] == (16, 2)
