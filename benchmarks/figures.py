@@ -2,7 +2,8 @@
 
 Each ``fig*/table*`` function returns (rows, derived) where rows is a list
 of CSV-able dicts and derived is a one-line summary metric used by run.py's
-``name,us_per_call,derived`` output.
+``name,us_total,derived`` output (whole-table wall time; per-call fenced
+medians live in benchmarks/wallclock.py).
 """
 from __future__ import annotations
 

@@ -467,3 +467,48 @@ def contract_audit() -> Tuple[List[dict], str]:
     assert not all_violations, \
         [f"{v.checker}:{v.code}@{v.where}" for v in all_violations]
     return rows, f"checkers=3 rows={len(rows)} violations=0"
+
+
+# ---------------------------------------------------------------------------
+# Autotune audit: every measured-stats schedule selection is traceable.
+#
+# Runs the scripted eager session from benchmarks/wallclock.py against a
+# fresh cache and renders the full decision log as the table — one row per
+# resolve event (default / measured / retune / hit), each carrying the
+# live-tile fractions and sample count it was decided from.  Asserts the
+# session's expected arc: compact under sparse output tiles, a drift
+# retune chain ending dense under all-live tiles, and two dims-keyed
+# workloads holding DIFFERENT schedules simultaneously (the per-(spec,
+# shape) selection contract).
+# ---------------------------------------------------------------------------
+
+def autotune_audit() -> Tuple[List[dict], str]:
+    from benchmarks.wallclock import autotune_session
+
+    selections, log, counters = autotune_session()
+    by_phase = {}
+    for s in selections:
+        by_phase.setdefault(s["phase"], []).append(s["schedule"])
+
+    assert by_phase["drift:sparse"][-1] == "compact", by_phase
+    assert by_phase["drift:dense"][-1] == "dense", by_phase
+    assert by_phase["shape:A"][-1] == "compact", by_phase
+    assert by_phase["shape:B"][-1] == "dense", by_phase
+    assert counters["retunes"] >= 1 and counters["hits"] >= 1, counters
+
+    # traceability: every measured/retune decision cites >= min_samples
+    # measured samples and a concrete live fraction ("default" rows are
+    # explicitly the static fallback; "hit" rows replay a prior decision,
+    # including its fractions); every log row carries the full field set.
+    for r in log:
+        assert set(r) == {"seq", "event", "key", "shape", "groups",
+                          "schedule", "block", "live_frac", "operand_frac",
+                          "samples"}, sorted(r)
+        if r["event"] in ("measured", "retune"):
+            assert r["live_frac"] is not None and r["samples"] >= 3, r
+
+    schedules = sorted({r["schedule"] for r in log})
+    return log, (
+        f"events={len(log)} schedules={'/'.join(schedules)} "
+        f"hits={counters['hits']} misses={counters['misses']} "
+        f"retunes={counters['retunes']} traceable=True")

@@ -1,4 +1,7 @@
-# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+# One function per paper table. Print ``name,us_total,derived`` CSV.
+# ``us_total`` is the whole-table wall time (trace + compile + every row's
+# calls) — it was previously mislabeled ``us_per_call``, which it never was.
+# Per-call medians with compile excluded live in benchmarks/wallclock.py.
 # Usage: python benchmarks/run.py [table ...] — no args runs every table;
 # naming tables (e.g. ``queue_cost_audit``) runs just those (CI artifacts).
 import csv
@@ -12,12 +15,33 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 
+HEADER = "name,us_total,derived"
+
+
+def write_rows(path: str, rows) -> None:
+    """Persist one table's rows as CSV.
+
+    Tables may emit heterogeneous rows (e.g. a summary row with extra keys);
+    ``fieldnames=rows[0].keys()`` used to crash with ``ValueError: dict
+    contains fields not in fieldnames`` on the first such table.  Use the
+    union of all keys in first-seen order and blank-fill the gaps.
+    """
+    fieldnames = []
+    for r in rows:
+        for k in r.keys():
+            if k not in fieldnames:
+                fieldnames.append(k)
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=fieldnames, restval="")
+        w.writeheader()
+        w.writerows(rows)
+
 
 def main() -> None:
     from benchmarks.figures import ALL_FIGURES
     from benchmarks.kernel_audit import (
-        bitmap_op_audit, contract_audit, depthwise_audit, kernel_audit,
-        launch_shape_audit, queue_cost_audit)
+        autotune_audit, bitmap_op_audit, contract_audit, depthwise_audit,
+        kernel_audit, launch_shape_audit, queue_cost_audit)
     from benchmarks.roofline import roofline_rows
 
     benches = dict(ALL_FIGURES)
@@ -27,6 +51,7 @@ def main() -> None:
     benches["launch_shape_audit"] = launch_shape_audit
     benches["depthwise_audit"] = depthwise_audit
     benches["contract_audit"] = contract_audit
+    benches["autotune_audit"] = autotune_audit
     benches["roofline_table"] = roofline_rows
 
     only = sys.argv[1:]
@@ -37,7 +62,7 @@ def main() -> None:
 
     os.makedirs(RESULTS_DIR, exist_ok=True)
     failed = []
-    print("name,us_per_call,derived")
+    print(HEADER)
     for name, fn in benches.items():
         t0 = time.time()
         try:
@@ -49,11 +74,7 @@ def main() -> None:
         us = (time.time() - t0) * 1e6
         # persist full rows per table
         if rows:
-            path = os.path.join(RESULTS_DIR, f"{name}.csv")
-            with open(path, "w", newline="") as f:
-                w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
-                w.writeheader()
-                w.writerows(rows)
+            write_rows(os.path.join(RESULTS_DIR, f"{name}.csv"), rows)
         print(f"{name},{us:.0f},{derived}")
     # Explicitly-named tables are CI gates: an error must fail the job
     # (the full sweep stays best-effort so one bad table can't hide the

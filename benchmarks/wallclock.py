@@ -1,0 +1,461 @@
+"""Wall-clock truth harness — measured time, honestly bounded.
+
+Every number this module emits follows the same methodology:
+
+  1. the measured callable is jitted and called ``warmup`` times first, so
+     trace + compile time is EXCLUDED from every reported figure (the
+     ``us_total`` column of benchmarks/run.py deliberately includes it;
+     this file is the per-call complement);
+  2. every timed call is fenced with ``jax.block_until_ready`` — async
+     dispatch means an unfenced ``time.perf_counter`` pair measures queue
+     submission, not execution (the same bug class as the per-step
+     ``float(metrics["loss"])`` sync that launch/train.py used to have);
+  3. the reported figure is the MEDIAN of ``reps`` fenced calls with the
+     inter-quartile range as spread — never a single sample, never a mean
+     that one scheduler hiccup can poison.
+
+Tables (one CSV each under benchmarks/results/, all rows in BENCH_7.json):
+
+  * ``gemm``        — one ``kernels.ops.sparse_gemm`` dispatch per schedule
+                      ∈ {predicated, compact, dense} for one CNN-derived
+                      workload (dims from ``CNNModel.gemm_workload``) and
+                      one FFN workload (the backward dX GEMM the paper's
+                      output sparsity targets);
+  * ``train_step``  — one whole jitted train step of models/cnn.py and
+                      models/ffn.py (forward + backward + SGD update);
+  * ``autotune``    — the decision log of a scripted autotune session
+                      (``autotune_session``): sparse→dense drift retunes
+                      plus per-(spec, shape) keyed selections, every row
+                      traceable to its measured live fraction.
+
+``BENCH_7.json`` at the repo root is schema-stable: ``check_schema``
+validates the exact key set per table and the acceptance coverage (every
+schedule measured for ≥1 CNN and ≥1 FFN workload); CI runs the smoke
+geometry and fails on drift.  See docs/benchmarking.md.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import statistics
+import sys
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import jax.numpy as jnp
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_PATH = os.path.join(REPO_ROOT, "BENCH_7.json")
+
+SCHEMA_VERSION = 1
+SCHEDULES = ("predicated", "compact", "dense")
+
+# The exact per-table row key sets BENCH_7.json commits to.  check_schema
+# fails on ANY deviation — added keys are drift just like missing ones.
+ROW_KEYS = {
+    "gemm": ("table", "workload", "schedule", "m", "k", "n", "groups",
+             "block", "us_median", "us_iqr", "reps", "warmup"),
+    "train_step": ("table", "workload", "schedule", "batch", "params",
+                   "us_median", "us_iqr", "reps", "warmup"),
+}
+AUTOTUNE_LOG_KEYS = ("seq", "event", "key", "shape", "groups", "schedule",
+                     "block", "live_frac", "operand_frac", "samples")
+
+
+# ---------------------------------------------------------------------------
+# The one timing primitive
+# ---------------------------------------------------------------------------
+
+def measure(call: Callable[[], object], *, warmup: int = 2,
+            reps: int = 5) -> Dict[str, float]:
+    """Median-of-``reps`` fenced wall time of ``call`` in µs, compile
+    excluded.
+
+    ``call`` must return its device output (a jitted function application):
+    the first of the ``warmup`` calls traces and compiles; every call —
+    warmup and timed alike — is fenced with ``jax.block_until_ready`` so a
+    timed interval can never start while a previous dispatch is still in
+    flight, and never end before its own work has."""
+    for _ in range(max(1, warmup)):
+        jax.block_until_ready(call())
+    times = []
+    for _ in range(max(1, reps)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(call())
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    q1 = times[len(times) // 4]
+    q3 = times[min(len(times) - 1, (3 * len(times)) // 4)]
+    return {
+        "us_median": round(statistics.median(times), 2),
+        "us_iqr": round(q3 - q1, 2),
+        "reps": int(reps),
+        "warmup": int(warmup),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Workload synthesis — block-structured sparsity with a KNOWN live fraction
+# ---------------------------------------------------------------------------
+
+def _blocky(key, shape: Tuple[int, int], block2: Tuple[int, int],
+            live: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(data, block bitmap): iid normal data gated by a Bernoulli(``live``)
+    BLOCK mask.  Element-iid zeros almost never kill a whole tile, so the
+    block bitmap of such data is ~all-live; gating whole blocks makes the
+    measured live fraction equal the drawn bitmap's mean — the workload's
+    sparsity is known, not hoped for."""
+    from repro.kernels.shapes import ceil_to
+    m, n = shape
+    b0, b1 = block2
+    mb, nb = ceil_to(m, b0) // b0, ceil_to(n, b1) // b1
+    kb, kd = jax.random.split(key)
+    bm = jax.random.bernoulli(kb, live, (mb, nb))
+    expand = jnp.repeat(jnp.repeat(bm, b0, 0), b1, 1)[:m, :n]
+    data = jax.random.normal(kd, shape, jnp.float32) * expand
+    return data, bm
+
+
+def cnn_gemm_dims(*, image_size: int, width: float, batch: int,
+                  layer: str = "conv2", stage: str = "bp_dx"
+                  ) -> Tuple[str, Tuple[int, int, int]]:
+    """One (M, K, N) from the CNN's OWN workload description — the dims a
+    real training step hands the dispatcher, not invented round numbers."""
+    from repro.models.cnn import build_cnn
+    model = build_cnn("vgg16", image_size=image_size, width=width,
+                      num_classes=10)
+    for row in model.gemm_workload(batch):
+        if row["layer"] == layer and row["stage"] == stage:
+            name = f"cnn:vgg16:{layer}:{stage}"
+            return name, (row["m"], row["k"], row["n"])
+    raise KeyError(f"{layer}/{stage} not in vgg16 workload")
+
+
+def bench_gemm_rows(*, smoke: bool) -> List[dict]:
+    """One measured row per schedule × workload.  All three schedules run
+    the SAME operands and masks; predicated/compact go through the Pallas
+    kernels, dense is the xla_ref lowering — so the comparison is the
+    paper's §5 scenario sweep at one fixed GEMM."""
+    from repro.core import policy as pol
+    from repro.kernels import ops
+    from repro.kernels.shapes import block_bitmap
+
+    block = (8, 8, 8)
+    timing = dict(warmup=1, reps=3) if smoke else dict(warmup=2, reps=5)
+    geo = dict(image_size=8, width=0.125, batch=2) if smoke else \
+        dict(image_size=10, width=0.25, batch=2)
+
+    cnn_name, cnn_dims = cnn_gemm_dims(**geo)
+    ffn_tokens = 64 if smoke else 128
+    workloads = [
+        (cnn_name, cnn_dims),
+        # the down-projection's backward dX GEMM: dL/dh = g @ W_downᵀ with
+        # the hidden ReLU mask killing output tiles (paper's core GEMM)
+        ("ffn:relu_bwd_dx", (ffn_tokens, 32, 64)),
+    ]
+    schedule_policies = {
+        "predicated": pol.IN_OUT.with_(kernel_impl="pallas", block=block),
+        "compact": pol.IN_OUT_WR.with_(kernel_impl="pallas", block=block),
+        "dense": pol.IN_OUT,                       # xla_ref ⇒ "dense"
+    }
+
+    rows: List[dict] = []
+    for wname, (m, k, n) in workloads:
+        key = jax.random.key(hash(wname) % (2 ** 31))
+        ka, kb_, ko = jax.random.split(key, 3)
+        a, _ = _blocky(ka, (m, k), (block[0], block[1]), live=0.6)
+        b = jax.random.normal(kb_, (k, n), jnp.float32)
+        out_t, _ = _blocky(ko, (m, n), (block[0], block[2]), live=0.5)
+        for sched, policy in schedule_policies.items():
+            spec = policy.gemm_spec()
+            assert spec.schedule == sched, (spec.schedule, sched)
+            masks = ops.GemmMasks(
+                out=block_bitmap(out_t, spec.block[0], spec.block[2]),
+                a=block_bitmap(a, spec.block[0], spec.block[1]),
+                b=None)
+
+            fn = jax.jit(functools.partial(
+                lambda a_, b_, masks_, spec_: ops.sparse_gemm(
+                    a_, b_, masks_, spec_), spec_=spec))
+            rows.append({
+                "table": "gemm", "workload": wname, "schedule": sched,
+                "m": m, "k": k, "n": n, "groups": spec.groups,
+                "block": "x".join(map(str, spec.block)),
+                **measure(lambda: fn(a, b, masks), **timing),
+            })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Whole train steps
+# ---------------------------------------------------------------------------
+
+def _tree_size(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def bench_train_rows(*, smoke: bool) -> List[dict]:
+    from repro.core import policy as pol
+    from repro.models.cnn import build_cnn
+    from repro.models.ffn import FFNConfig, ffn_apply, ffn_init
+
+    timing = dict(warmup=1, reps=3) if smoke else dict(warmup=2, reps=5)
+    rows: List[dict] = []
+    policy = pol.IN_OUT                           # xla_ref: CPU-feasible
+
+    # -- CNN step --------------------------------------------------------
+    batch = 2
+    model = build_cnn("vgg16", image_size=8, width=0.125, num_classes=10)
+    params = model.init(jax.random.key(0))
+    img = jax.random.normal(jax.random.key(1), (batch, 8, 8, 3), jnp.float32)
+    lbl = jax.random.randint(jax.random.key(2), (batch,), 0, 10)
+
+    @jax.jit
+    def cnn_step(p, img, lbl):
+        loss, g = jax.value_and_grad(
+            lambda q: model.loss(q, img, lbl, policy))(p)
+        return jax.tree.map(lambda w, dw: w - 0.05 * dw, p, g), loss
+
+    rows.append({
+        "table": "train_step", "workload": "cnn:vgg16",
+        "schedule": policy.gemm_spec().schedule, "batch": batch,
+        "params": _tree_size(params),
+        **measure(lambda: cnn_step(params, img, lbl), **timing),
+    })
+
+    # -- FFN step --------------------------------------------------------
+    tokens = 32 if smoke else 64
+    cfg = FFNConfig(d_model=16, d_ff=32, activation="relu",
+                    sparse_policy=policy)
+    fparams = ffn_init(jax.random.key(3), cfg)
+    x = jax.random.normal(jax.random.key(4), (tokens, cfg.d_model))
+    y = jax.random.normal(jax.random.key(5), (tokens, cfg.d_model))
+
+    @jax.jit
+    def ffn_step(p, x, y):
+        def loss(q):
+            return jnp.mean((ffn_apply(q, x, cfg) - y) ** 2)
+        l, g = jax.value_and_grad(loss)(p)
+        return jax.tree.map(lambda w, dw: w - 0.05 * dw, p, g), l
+
+    rows.append({
+        "table": "train_step", "workload": "ffn:relu",
+        "schedule": policy.gemm_spec().schedule, "batch": tokens,
+        "params": _tree_size(fparams),
+        **measure(lambda: ffn_step(fparams, x, y), **timing),
+    })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Scripted autotune session — the traceability evidence
+# ---------------------------------------------------------------------------
+
+def autotune_session(*, drift_steps: Tuple[int, int] = (8, 10),
+                     shape_steps: int = 6, seed: int = 0
+                     ) -> Tuple[List[dict], List[dict], Dict[str, int]]:
+    """Two-part eager session against a FRESH autotune cache; returns
+    (per-step selections, decision log, cache counters).
+
+    Part 1 (temporal drift, shapeless key): dispatch at ~25% live output
+    tiles — the cache should settle on "compact" — then at 100% live,
+    driving a drift retune through "predicated" to "dense" once the
+    trailing window is all-dense.
+
+    Part 2 (per-shape keys): two interleaved dims-keyed workloads, one
+    staying sparse and one fully dense, must hold DIFFERENT schedules
+    simultaneously — the per-(spec, shape) selection the key exists for.
+
+    Eager dispatches only: masks are concrete, so every resolution reads
+    MEASURED live fractions recorded by the dispatcher itself."""
+    from repro.core import policy as pol
+    from repro.kernels import autotune, ops, stats
+    from repro.kernels.shapes import block_bitmap
+
+    stats.reset()
+    cache = autotune.reset(window=6, min_samples=3)
+    block = (8, 8, 8)
+    policy = pol.IN_OUT_WR.with_(kernel_impl="pallas", block=block,
+                                 autotune=True)
+    selections: List[dict] = []
+    step = 0
+
+    def dispatch(live: float, dims: Optional[Tuple[int, int, int]],
+                 phase: str) -> None:
+        nonlocal step
+        m, k, n = dims or (32, 16, 24)
+        key = jax.random.key(seed * 10_000 + step)
+        ka, kb_, ko = jax.random.split(key, 3)
+        spec = policy.gemm_spec(dims=dims) if dims is not None \
+            else policy.gemm_spec()
+        a = jax.random.normal(ka, (m, k), jnp.float32)
+        b = jax.random.normal(kb_, (k, n), jnp.float32)
+        out_t, _ = _blocky(ko, (m, n), (spec.block[0], spec.block[2]), live)
+        masks = ops.GemmMasks(
+            out=block_bitmap(out_t, spec.block[0], spec.block[2]))
+        ops.sparse_gemm(a, b, masks, spec)        # eager: concrete masks
+        selections.append({"step": step, "phase": phase,
+                           "live": live, "dims": dims,
+                           "schedule": spec.schedule})
+        step += 1
+
+    sparse_steps, dense_steps = drift_steps
+    for _ in range(sparse_steps):
+        dispatch(0.25, None, "drift:sparse")
+    for _ in range(dense_steps):
+        dispatch(1.0, None, "drift:dense")
+    for _ in range(shape_steps):
+        dispatch(0.25, (32, 16, 24), "shape:A")
+        dispatch(1.0, (16, 16, 16), "shape:B")
+
+    counters = {"hits": cache.hits, "misses": cache.misses,
+                "retunes": cache.retunes}
+    return selections, autotune.log_rows(), counters
+
+
+# ---------------------------------------------------------------------------
+# Schema
+# ---------------------------------------------------------------------------
+
+def check_schema(doc: dict) -> List[str]:
+    """Validate a BENCH_7 document; returns a list of problems (empty ⇒
+    OK).  Checks the exact per-table key sets, the acceptance coverage
+    (every schedule measured for ≥1 CNN and ≥1 FFN GEMM workload; a CNN
+    and an FFN train step), positive fenced medians, and that every
+    autotune log row carries its traceability fields."""
+    errs: List[str] = []
+    for top in ("schema_version", "bench", "jax_backend", "geometry",
+                "rows", "autotune"):
+        if top not in doc:
+            errs.append(f"missing top-level key {top!r}")
+    if errs:
+        return errs
+    if doc["schema_version"] != SCHEMA_VERSION:
+        errs.append(f"schema_version {doc['schema_version']} != "
+                    f"{SCHEMA_VERSION}")
+
+    seen: Dict[str, set] = {"cnn": set(), "ffn": set()}
+    train_seen = set()
+    for i, row in enumerate(doc["rows"]):
+        table = row.get("table")
+        if table not in ROW_KEYS:
+            errs.append(f"rows[{i}]: unknown table {table!r}")
+            continue
+        want = set(ROW_KEYS[table])
+        got = set(row)
+        if got != want:
+            errs.append(f"rows[{i}] ({table}): key drift "
+                        f"+{sorted(got - want)} -{sorted(want - got)}")
+            continue
+        if not (isinstance(row["us_median"], (int, float))
+                and row["us_median"] > 0):
+            errs.append(f"rows[{i}] ({table}): non-positive us_median")
+        if table == "gemm":
+            if row["schedule"] not in SCHEDULES:
+                errs.append(f"rows[{i}]: unknown schedule "
+                            f"{row['schedule']!r}")
+            fam = row["workload"].split(":", 1)[0]
+            if fam in seen:
+                seen[fam].add(row["schedule"])
+        elif table == "train_step":
+            train_seen.add(row["workload"].split(":", 1)[0])
+
+    for fam, scheds in seen.items():
+        missing = set(SCHEDULES) - scheds
+        if missing:
+            errs.append(f"gemm coverage: {fam} workload missing schedules "
+                        f"{sorted(missing)}")
+    for fam in ("cnn", "ffn"):
+        if fam not in train_seen:
+            errs.append(f"train_step coverage: no {fam} row")
+
+    at = doc["autotune"]
+    for k in ("counters", "selections", "log"):
+        if k not in at:
+            errs.append(f"autotune: missing {k!r}")
+    for i, row in enumerate(at.get("log", [])):
+        if set(row) != set(AUTOTUNE_LOG_KEYS):
+            errs.append(f"autotune.log[{i}]: key drift {sorted(row)}")
+            break
+    if not at.get("log"):
+        errs.append("autotune.log is empty — selections are not traceable")
+    return errs
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def run_bench(*, smoke: bool = False) -> dict:
+    rows = bench_gemm_rows(smoke=smoke) + bench_train_rows(smoke=smoke)
+    selections, log, counters = autotune_session()
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "bench": "BENCH_7",
+        "jax_backend": jax.default_backend(),
+        "geometry": "smoke" if smoke else "full",
+        "rows": rows,
+        "autotune": {"counters": counters, "selections": selections,
+                     "log": log},
+    }
+
+
+def write_outputs(doc: dict, out_path: str) -> None:
+    from benchmarks.run import RESULTS_DIR, write_rows
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=False)
+        f.write("\n")
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    by_table: Dict[str, List[dict]] = {}
+    for row in doc["rows"]:
+        by_table.setdefault(row["table"], []).append(row)
+    for table, rows in by_table.items():
+        write_rows(os.path.join(RESULTS_DIR, f"wallclock_{table}.csv"), rows)
+    if doc["autotune"]["log"]:
+        write_rows(os.path.join(RESULTS_DIR, "wallclock_autotune.csv"),
+                   doc["autotune"]["log"])
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced geometry + fewer reps (CI)")
+    ap.add_argument("--out", default=BENCH_PATH,
+                    help="BENCH JSON path (default: repo-root BENCH_7.json)")
+    ap.add_argument("--check", metavar="PATH",
+                    help="validate an existing BENCH file and exit")
+    args = ap.parse_args(argv)
+
+    if args.check:
+        with open(args.check) as f:
+            errs = check_schema(json.load(f))
+        for e in errs:
+            print(f"SCHEMA: {e}", file=sys.stderr)
+        print(f"{args.check}: {'DRIFT' if errs else 'ok'}")
+        return 1 if errs else 0
+
+    doc = run_bench(smoke=args.smoke)
+    errs = check_schema(doc)
+    if errs:
+        for e in errs:
+            print(f"SCHEMA: {e}", file=sys.stderr)
+        return 1
+    write_outputs(doc, args.out)
+    for row in doc["rows"]:
+        print(f"{row['table']},{row['workload']},{row['schedule']},"
+              f"{row['us_median']:.0f}us ±{row['us_iqr']:.0f}")
+    c = doc["autotune"]["counters"]
+    print(f"autotune: hits={c['hits']} misses={c['misses']} "
+          f"retunes={c['retunes']} log_rows={len(doc['autotune']['log'])}")
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -25,6 +25,7 @@ from typing import Literal, Optional, Tuple
 
 import jax.numpy as jnp
 
+from repro.kernels import autotune as _autotune
 from repro.kernels.ops import GemmSpec
 from repro.kernels.shapes import ceil_to
 
@@ -64,6 +65,16 @@ class SparsityPolicy:
     fuse_epilogue: bool = True            # BP: σ'-Hadamard inside the kernel
                                           # (False = separate VPU pass, for
                                           # ablating the fused writeback)
+    autotune: bool = False                # measured-stats schedule/tile
+                                          # selection: gemm_spec consults the
+                                          # kernels/autotune cache (keyed on
+                                          # spec-minus-schedule + padded
+                                          # shape, fed by live-tile stats of
+                                          # recent dispatches) instead of
+                                          # taking the static resolution —
+                                          # the static choice stays the
+                                          # fallback until enough samples
+                                          # accumulate (docs/benchmarking.md)
 
     @property
     def any_sparsity(self) -> bool:
@@ -97,6 +108,13 @@ class SparsityPolicy:
         ``work_redistribution`` ⇒ "compact", else "predicated".
         ``fused_epilogue`` declares a σ′-Hadamard fused into the writeback
         (callers pass the multiplier itself to ``sparse_gemm``).
+
+        With ``autotune=True`` the static resolution above becomes the
+        DEFAULT, and the ``kernels/autotune`` cache may retarget schedule
+        (and, when ``dims`` are given, tile edges — granularity-safely)
+        from measured live-tile stats of recent dispatches.  The resolved
+        spec keeps ``origin="policy"``: autotuning is still this one
+        sanctioned resolution point, just measurement-driven.
         """
         block = grouped_gemm_block(self, dims, grans) \
             if dims is not None else self.block
@@ -106,7 +124,7 @@ class SparsityPolicy:
             schedule = "compact"
         else:
             schedule = "predicated"
-        return GemmSpec(
+        spec = GemmSpec(
             block=block,
             groups=groups,
             schedule=schedule,
@@ -117,6 +135,9 @@ class SparsityPolicy:
             interpret=self.interpret,
             origin="policy",
         )
+        if self.autotune:
+            spec = _autotune.resolve(spec, dims=dims, grans=grans)
+        return spec
 
 
 def grouped_gemm_block(

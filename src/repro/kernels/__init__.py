@@ -4,7 +4,7 @@ Layout (per kernel): <name>.py — pl.pallas_call + BlockSpec tiling;
 ops.py — the spec-driven ``sparse_gemm`` dispatcher + jit'd public
 wrappers; shapes.py — shared pad/tile helpers; ref.py — pure-jnp oracles.
 """
-from . import ops, queue_builder, ref, shapes, stats  # noqa: F401
+from . import autotune, ops, queue_builder, ref, shapes, stats  # noqa: F401
 from .ops import (  # noqa: F401
     GemmMasks,
     GemmSpec,

@@ -1,0 +1,325 @@
+"""Spec-keyed GEMM autotuner — schedule and tile selection from MEASURED
+live-tile stats, not static policy (ROADMAP "Spec-keyed autotuner +
+wall-clock truth").
+
+SparseTrain's adaptive-dataflow result (arXiv 2007.13595) says the best
+schedule is sparsity-dependent, and sparsity drifts during training; the
+static ``kernel_impl``/``work_redistribution`` resolution in
+``SparsityPolicy.gemm_spec`` cannot follow that drift.  This module adds
+the measured path:
+
+  * ``AutotuneKey`` — the cache key: the spec MINUS its schedule (block,
+    groups, epilogue, queue builder, out dtype) plus the block-padded
+    per-group (M, K, N) when the caller's dims are known.  ``GemmSpec`` is
+    frozen and hashable precisely so this key is well-defined.
+  * ``AutotuneCache`` — per-key decisions ∈ {predicated, compact, dense}
+    (+ a granularity-safe block refinement) from the trailing window of
+    live-tile fractions that ``kernels/stats.py`` records for every
+    concrete ``sparse_gemm`` dispatch.  A cached decision is re-evaluated
+    when the measured out-live fraction drifts past ``drift_threshold``
+    from the fraction it was decided at.  Every resolve event (default /
+    measured / retune / hit) is appended to a decision log — the audit
+    table ``benchmarks/kernel_audit.autotune_audit`` and the wall-clock
+    harness's ``BENCH_*.json`` both render it, so every selection is
+    traceable.
+
+Resolution happens INSIDE ``SparsityPolicy.gemm_spec`` (the one sanctioned
+policy→spec point) when the policy sets ``autotune=True`` — no call site
+changes, and the resolved spec keeps ``origin="policy"`` so the static
+analyzer's SPEC_UNRESOLVED check stays green.
+
+Decision rule (measured out-live fraction o, operand-live fraction p, over
+≥ ``min_samples`` recent dispatches):
+
+  o ≤ compact_max_live      → "compact"    (enough dead output tiles that
+                                            queue compaction pays for its
+                                            construction)
+  min(o, p) ≥ dense_min_live → "dense"     (nothing to skip anywhere: drop
+                                            the masking machinery, let the
+                                            MXU run dense)
+  otherwise                  → "predicated" (moderate sparsity: per-tile
+                                            guards without queue overhead)
+
+Block refinement: when output tiles are mostly live (o ≥
+``refine_block_live``) but the schedule still masks, the tile edges are
+halved (floored to the caller's mask-granularity multiples) so finer tiles
+can capture zeros the coarse tiles straddle.  Refinement only applies when
+the caller passed ``dims`` — exactly the call sites (the grouped conv
+engine) that derive their masks from the RESOLVED ``spec.block``; the
+no-dims linear funnel builds masks at the policy's nominal block, so its
+block is never moved.
+
+Timing semantics: resolution runs at Python trace time.  Eager dispatches
+(the wall-clock harness, probe steps) see retunes immediately; a jitted
+step keeps the schedule it was traced with until it is re-traced — the
+cache is host state, deliberately outside the jaxpr.  See
+docs/benchmarking.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Dict, List, Optional, Tuple, TYPE_CHECKING
+
+from . import stats
+from .shapes import ceil_to
+
+if TYPE_CHECKING:  # avoid the ops → autotune → ops import cycle
+    from .ops import GemmSpec
+
+
+# ---------------------------------------------------------------------------
+# The cache key: (spec minus schedule, padded shape)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AutotuneKey:
+    """Everything that identifies a GEMM *request* except how to run it.
+
+    ``padded`` is the block-padded per-group (M, K, N) — the launch shape
+    the decision is for — or None when the resolution point does not know
+    dims (the linear-path ``gemm_spec(groups=...)`` calls); shapeless keys
+    aggregate over every shape that spec serves.
+
+    ``epilogue`` and ``out_dtype`` are deliberately NOT part of the key:
+    ``core.sparse_linear._mm`` sets both on the spec AFTER policy
+    resolution (``spec.with_``), so keying on them would split the
+    observation stream from the resolution stream — and neither changes
+    the sparsity signature the decision rule reads."""
+    block: Tuple[int, int, int]
+    groups: int
+    queue_builder: str
+    padded: Optional[Tuple[int, int, int]] = None
+
+    @property
+    def stats_key(self) -> str:
+        """The ``kernels.stats`` ring-buffer key this request's live-tile
+        observations are recorded under."""
+        shape = "x".join(map(str, self.padded)) if self.padded else "any"
+        return ("autotune:" + "x".join(map(str, self.block))
+                + f":g{self.groups}:{self.queue_builder}:{shape}")
+
+
+def key_for(spec: "GemmSpec",
+            dims: Optional[Tuple[int, int, int]] = None) -> AutotuneKey:
+    """Build the cache key from a spec (its schedule — and the
+    post-resolution ``epilogue``/``out_dtype`` fields — are ignored) and
+    the per-group GEMM dims, padded to the spec's block."""
+    padded = None
+    if dims is not None:
+        padded = tuple(ceil_to(d, b) for d, b in zip(dims, spec.block))
+    return AutotuneKey(
+        block=tuple(spec.block), groups=spec.groups,
+        queue_builder=spec.queue_builder, padded=padded)
+
+
+# ---------------------------------------------------------------------------
+# Decisions
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Decision:
+    """One cached selection, plus the measurement it was made from."""
+    key: AutotuneKey
+    schedule: str
+    block: Tuple[int, int, int]
+    live_frac: Optional[float]      # mean out-live fraction at decision time
+    operand_frac: Optional[float]
+    samples: int                    # measured samples behind the decision
+    event: str                      # "default" | "measured" | "retune"
+    seq: int
+
+
+def _refined_block(block: Tuple[int, int, int],
+                   grans: Tuple[int, int, int]) -> Tuple[int, int, int]:
+    """Halve each tile edge, floored to its mask-granularity multiple —
+    the only block move that keeps caller-derived masks well-formed."""
+    out = []
+    for b, g in zip(block, grans):
+        e = max(1, b // 2)
+        out.append(max(g, ceil_to(e, g)))
+    return tuple(out)
+
+
+class AutotuneCache:
+    """Per-(spec-minus-schedule, padded shape) schedule/tile decisions from
+    measured live-tile stats, with drift re-evaluation and a full decision
+    log (the traceability contract)."""
+
+    def __init__(self, *, window: int = 32, min_samples: int = 4,
+                 drift_threshold: float = 0.15,
+                 compact_max_live: float = 0.5,
+                 dense_min_live: float = 0.98,
+                 refine_block_live: float = 0.75):
+        self.window = window
+        self.min_samples = min_samples
+        self.drift_threshold = drift_threshold
+        self.compact_max_live = compact_max_live
+        self.dense_min_live = dense_min_live
+        self.refine_block_live = refine_block_live
+        self.hits = 0
+        self.misses = 0
+        self.retunes = 0
+        self.log: List[dict] = []
+        self._decisions: Dict[AutotuneKey, Decision] = {}
+        # dispatch signature of a resolved spec → the key that resolved it,
+        # so the dispatcher's observation lands in the same buffer the NEXT
+        # resolve reads even when the tuned block differs from the key's
+        # nominal request.  The signature ignores schedule/epilogue/
+        # out_dtype (callers may ``with_`` those after resolution).
+        self._spec_keys: Dict[Any, AutotuneKey] = {}
+        self._seq = itertools.count()
+
+    @staticmethod
+    def _dispatch_sig(spec: "GemmSpec",
+                      dims: Optional[Tuple[int, int, int]]) -> tuple:
+        padded = None if dims is None else tuple(
+            ceil_to(d, b) for d, b in zip(dims, spec.block))
+        return (tuple(spec.block), spec.groups, spec.queue_builder, padded)
+
+    # -- observation ----------------------------------------------------
+
+    def observe(self, key: AutotuneKey, out_frac: float,
+                operand_frac: float = 1.0) -> None:
+        """Record one measured live-tile sample for ``key`` — and for its
+        shapeless twin, so no-dims resolutions see shaped traffic too."""
+        stats.record_live_tiles(key.stats_key, out_frac, operand_frac)
+        if key.padded is not None:
+            shapeless = dataclasses.replace(key, padded=None)
+            stats.record_live_tiles(shapeless.stats_key, out_frac,
+                                    operand_frac)
+
+    def observe_dispatch(self, spec: "GemmSpec",
+                         dims: Tuple[int, int, int], out_frac: float,
+                         operand_frac: float = 1.0) -> None:
+        """Dispatcher-side entry: attribute a concrete ``sparse_gemm``'s
+        measured fractions to the key that resolved ``spec`` (falling back
+        to a fresh key for specs this cache never saw)."""
+        key = self._spec_keys.get(self._dispatch_sig(spec, dims)) \
+            or self._spec_keys.get(self._dispatch_sig(spec, None)) \
+            or key_for(spec, dims)
+        self.observe(key, out_frac, operand_frac)
+
+    # -- resolution -----------------------------------------------------
+
+    def measured(self, key: AutotuneKey
+                 ) -> Tuple[Optional[float], Optional[float], int]:
+        return stats.live_tile_stats(key.stats_key, window=self.window)
+
+    def resolve(self, key: AutotuneKey, default_spec: "GemmSpec", *,
+                grans: Tuple[int, int, int] = (1, 1, 1),
+                dims: Optional[Tuple[int, int, int]] = None) -> "GemmSpec":
+        """The cache lookup: return ``default_spec`` retargeted onto the
+        cached (or freshly decided) schedule/block for ``key``."""
+        out_frac, op_frac, n = self.measured(key)
+        prev = self._decisions.get(key)
+        if prev is not None:
+            newly_measured = prev.event == "default" \
+                and n >= self.min_samples
+            drifted = (prev.live_frac is not None and out_frac is not None
+                       and abs(out_frac - prev.live_frac)
+                       > self.drift_threshold)
+            if not (newly_measured or drifted):
+                self.hits += 1
+                self._append_log(prev, "hit")
+                return self._apply(prev, default_spec, key, dims)
+            self.retunes += 1
+            decision = self._decide(key, default_spec, out_frac, op_frac, n,
+                                    grans, dims, event="retune")
+        else:
+            self.misses += 1
+            event = "measured" if n >= self.min_samples else "default"
+            decision = self._decide(key, default_spec, out_frac, op_frac, n,
+                                    grans, dims, event=event)
+        self._decisions[key] = decision
+        self._append_log(decision, decision.event)
+        return self._apply(decision, default_spec, key, dims)
+
+    def _decide(self, key, default_spec, out_frac, op_frac, n, grans, dims,
+                *, event: str) -> Decision:
+        if n < self.min_samples or out_frac is None:
+            # Not enough measurement yet: the static policy resolution
+            # stands, recorded as an explicit (traceable) default.
+            return Decision(key, default_spec.schedule,
+                            tuple(default_spec.block), out_frac, op_frac, n,
+                            "default", next(self._seq))
+        if out_frac <= self.compact_max_live:
+            schedule = "compact"
+        elif min(out_frac, op_frac if op_frac is not None else 1.0) \
+                >= self.dense_min_live:
+            schedule = "dense"
+        else:
+            schedule = "predicated"
+        block = tuple(default_spec.block)
+        if schedule != "dense" and dims is not None \
+                and out_frac >= self.refine_block_live:
+            block = _refined_block(block, grans)
+        return Decision(key, schedule, block, out_frac, op_frac, n, event,
+                        next(self._seq))
+
+    def _apply(self, decision: Decision, default_spec: "GemmSpec",
+               key: AutotuneKey,
+               dims: Optional[Tuple[int, int, int]]) -> "GemmSpec":
+        spec = default_spec.with_(schedule=decision.schedule,
+                                  block=decision.block)
+        self._spec_keys[self._dispatch_sig(spec, dims)] = key
+        return spec
+
+    def _append_log(self, decision: Decision, event: str) -> None:
+        self.log.append({
+            "seq": decision.seq,
+            "event": event,
+            "key": decision.key.stats_key,
+            "shape": "x".join(map(str, decision.key.padded))
+            if decision.key.padded else "any",
+            "groups": decision.key.groups,
+            "schedule": decision.schedule,
+            "block": "x".join(map(str, decision.block)),
+            "live_frac": None if decision.live_frac is None
+            else round(decision.live_frac, 4),
+            "operand_frac": None if decision.operand_frac is None
+            else round(decision.operand_frac, 4),
+            "samples": decision.samples,
+        })
+
+    def decisions(self) -> Dict[AutotuneKey, Decision]:
+        return dict(self._decisions)
+
+
+# ---------------------------------------------------------------------------
+# The process-global cache (mirrors the stats counters' lifetime)
+# ---------------------------------------------------------------------------
+
+_CACHE = AutotuneCache()
+
+
+def get_cache() -> AutotuneCache:
+    return _CACHE
+
+
+def reset(**cache_kwargs) -> AutotuneCache:
+    """Fresh global cache (optionally with non-default thresholds); the
+    live-tile buffers in ``kernels.stats`` are cleared separately by
+    ``stats.reset()``."""
+    global _CACHE
+    _CACHE = AutotuneCache(**cache_kwargs)
+    return _CACHE
+
+
+def resolve(default_spec: "GemmSpec", *,
+            dims: Optional[Tuple[int, int, int]] = None,
+            grans: Tuple[int, int, int] = (1, 1, 1)) -> "GemmSpec":
+    """Module-level resolution entry used by ``SparsityPolicy.gemm_spec``."""
+    key = key_for(default_spec, dims)
+    return _CACHE.resolve(key, default_spec, grans=grans, dims=dims)
+
+
+def observe_dispatch(spec: "GemmSpec", dims: Tuple[int, int, int],
+                     out_frac: float, operand_frac: float = 1.0) -> None:
+    """Dispatcher hook (``kernels.ops.sparse_gemm``)."""
+    _CACHE.observe_dispatch(spec, dims, out_frac, operand_frac)
+
+
+def log_rows() -> List[dict]:
+    """The decision log — one row per resolve event, audit-table ready."""
+    return list(_CACHE.log)

@@ -264,9 +264,37 @@ def sparse_gemm(
     stats.record(spec.stats_key)
     if _GEMM_EVENTS is not None:
         _GEMM_EVENTS.append(spec)
+    _observe_live_tiles(spec, a3, b3, masks)
     with stats.lifecycle_scope("gemm", f"{spec.schedule}:{spec.groups}"):
         out = _dispatch(a3, b3, masks, spec, mult3)
     return out[0] if not grouped_in else out
+
+
+def _observe_live_tiles(spec: GemmSpec, a3, b3, masks: GemmMasks) -> None:
+    """Measured live-tile telemetry for the autotuner (kernels/autotune.py).
+
+    Only CONCRETE masks are observed — an eager dispatch (the wall-clock
+    harness, probe steps, eager grads' forward pass) yields real measured
+    fractions; a traced dispatch carries tracers and records nothing, so
+    the telemetry is never a modeled number.  Fractions are over the
+    UNPADDED block bitmaps: the fraction of live output tiles (the compact
+    queue's work units; 1.0 when no out mask) and the min live fraction
+    across operand masks (the input-skipping signal)."""
+    present = [m for m in masks if m is not None]
+    if not present or any(isinstance(m, jax.core.Tracer) for m in present):
+        return
+    import numpy as np
+
+    def frac(m) -> float:
+        arr = np.asarray(m)
+        return float(arr.astype(bool).mean()) if arr.size else 1.0
+
+    out_frac = frac(masks.out) if masks.out is not None else 1.0
+    operand = [frac(m) for m in (masks.a, masks.b) if m is not None]
+    op_frac = min(operand) if operand else 1.0
+    from . import autotune
+    _, m, k = a3.shape
+    autotune.observe_dispatch(spec, (m, k, b3.shape[2]), out_frac, op_frac)
 
 
 def _dispatch(a, b, masks: GemmMasks, spec: GemmSpec, mult):

@@ -31,7 +31,7 @@ from __future__ import annotations
 import collections
 import contextlib
 import itertools
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 import jax
 
@@ -60,6 +60,7 @@ def record(kind: str) -> None:
 
 def reset() -> None:
     _COUNTS.clear()
+    _LIVE.clear()
 
 
 def counts() -> Dict[str, int]:
@@ -110,6 +111,57 @@ def counting():
         yield counts
     finally:
         pass
+
+
+# ---------------------------------------------------------------------------
+# Live-tile telemetry — the measured signal the spec-keyed autotuner tunes on
+# ---------------------------------------------------------------------------
+#
+# The counters above say WHICH kernels launched; these buffers say how much
+# of each launch was live.  Every concrete (non-traced) ``sparse_gemm``
+# dispatch records its unpadded live-tile fractions under its autotune key
+# (``kernels/autotune.key_for``): the fraction of live OUTPUT tiles (the
+# compact queue's work units) and the min live fraction across operand
+# masks (the input-skipping signal).  A bounded ring buffer per key keeps
+# the trailing window of recent steps — what ``AutotuneCache.resolve``
+# reads to pick a schedule, and what its drift re-evaluation compares
+# against.  Traced dispatches carry tracers and record nothing: these are
+# MEASURED fractions, never modeled ones.
+
+LIVE_WINDOW = 128
+
+_LIVE: Dict[str, "collections.deque[Tuple[float, float]]"] = {}
+
+
+def record_live_tiles(key: str, out_frac: float,
+                      operand_frac: float = 1.0) -> None:
+    """Append one measured (out, operand) live-tile fraction pair for
+    ``key`` (bounded: the newest ``LIVE_WINDOW`` samples are kept)."""
+    buf = _LIVE.get(key)
+    if buf is None:
+        buf = _LIVE[key] = collections.deque(maxlen=LIVE_WINDOW)
+    buf.append((float(out_frac), float(operand_frac)))
+
+
+def live_tile_stats(key: str, window: Optional[int] = None
+                    ) -> Tuple[Optional[float], Optional[float], int]:
+    """(mean out-live fraction, mean operand-live fraction, n) over the
+    trailing ``window`` samples for ``key`` — (None, None, 0) if nothing
+    has been observed."""
+    buf = _LIVE.get(key)
+    if not buf:
+        return None, None, 0
+    items = list(buf)
+    if window is not None:
+        items = items[-window:]
+    outs = sum(o for o, _ in items) / len(items)
+    opnds = sum(p for _, p in items) / len(items)
+    return outs, opnds, len(items)
+
+
+def live_tile_keys() -> list:
+    """Keys that have at least one recorded live-tile sample."""
+    return [k for k, v in _LIVE.items() if v]
 
 
 # ---------------------------------------------------------------------------

@@ -41,19 +41,36 @@ class StragglerDetector:
     On a multi-host fleet the flag triggers the WR analogue at the cluster
     level: reassigning that host's shard of the next batches (the paper's
     §4.6 policy, one level up).  Here we record decisions for inspection.
+
+    Two past skews are deliberately designed out:
+
+    * the current sample must NOT be part of the median it is judged
+      against — with small histories one giant outlier dragged the median
+      up enough to excuse itself (self-masking);
+    * the first observed step is compile + execute, often 100×+ a steady
+      step; seeding the history with it inflated the median so the first
+      real stragglers passed.  ``skip_first`` drops it from the history
+      entirely (it can't be a straggler — there's nothing to compare it
+      to — and it must not become the baseline either).
     """
     window: int = 32
     threshold: float = 2.0
+    min_history: int = 8
+    skip_first: bool = True
     times: list = dataclasses.field(default_factory=list)
     flags: list = dataclasses.field(default_factory=list)
+    _seen: int = 0
 
     def observe(self, step: int, dt: float) -> bool:
-        self.times.append(dt)
-        hist = self.times[-self.window:]
-        med = float(np.median(hist))
-        slow = len(hist) >= 8 and dt > self.threshold * med
+        self._seen += 1
+        if self.skip_first and self._seen == 1:
+            return False
+        hist = self.times[-self.window:]          # trailing, EXCLUDING dt
+        med = float(np.median(hist)) if hist else 0.0
+        slow = len(hist) >= self.min_history and dt > self.threshold * med
         if slow:
             self.flags.append((step, dt, med))
+        self.times.append(dt)
         return slow
 
 
@@ -124,18 +141,24 @@ def train_loop(
                              seq_len=seq_len, vocab=cfg.vocab_size)
             t0 = time.time()
             params, opt_state, metrics = jitted(params, opt_state, batch)
-            loss = float(metrics["loss"])
+            # Do NOT materialize metrics here: float(metrics["loss"]) is a
+            # device→host sync that stalls dispatch EVERY step, serializing
+            # the loop and poisoning dt (it measures the sync, not the
+            # step).  Keep losses as device values; sync only on steps that
+            # actually read them.
             dt = time.time() - t0
             slow = detector.observe(step, dt)
-            losses.append(loss)
-            if on_metrics:
-                on_metrics(step, {**{k: float(v) for k, v in metrics.items()},
-                                  "time_s": dt, "straggler": slow})
-            if log_every and step % log_every == 0:
-                print(f"step {step:5d} loss {loss:8.4f} "
-                      f"gnorm {float(metrics['grad_norm']):8.3f} "
-                      f"lr {float(metrics['lr']):.2e} {dt*1e3:7.1f} ms"
-                      + ("  [straggler]" if slow else ""))
+            losses.append(metrics["loss"])
+            log_step = log_every and step % log_every == 0
+            if on_metrics or log_step:
+                host = {k: float(v) for k, v in metrics.items()}
+                if on_metrics:
+                    on_metrics(step, {**host, "time_s": dt, "straggler": slow})
+                if log_step:
+                    print(f"step {step:5d} loss {host['loss']:8.4f} "
+                          f"gnorm {host['grad_norm']:8.3f} "
+                          f"lr {host['lr']:.2e} {dt*1e3:7.1f} ms"
+                          + ("  [straggler]" if slow else ""))
             if ckpt_dir and tcfg.checkpoint_every and \
                     (step + 1) % tcfg.checkpoint_every == 0:
                 ckpt.save(ckpt_dir, step + 1,
@@ -144,6 +167,7 @@ def train_loop(
     if ckpt_dir:
         ckpt.save(ckpt_dir, steps, {"params": params, "opt": opt_state},
                   keep=tcfg.keep_checkpoints)
+    losses = [float(l) for l in losses]   # one sync, after the loop
     return {"params": params, "opt_state": opt_state, "losses": losses,
             "straggler": detector, "resumed_from": resumed_from}
 

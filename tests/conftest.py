@@ -13,10 +13,13 @@ import pytest  # noqa: E402
 
 @pytest.fixture(autouse=True)
 def _reset_stats_counters():
-    """The stats counters are process-global and record at trace time, so
-    any test that traces a sparse op leaks counts into the next test.
-    Reset around every test so counter assertions are order-independent."""
-    from repro.kernels import stats
+    """The stats counters, live-tile buffers and the autotune cache are
+    process-global host state recorded at trace time, so any test that
+    traces a sparse op leaks state into the next test.  Reset around every
+    test so counter/decision assertions are order-independent."""
+    from repro.kernels import autotune, stats
     stats.reset()
+    autotune.reset()
     yield
     stats.reset()
+    autotune.reset()

@@ -1,0 +1,310 @@
+"""Wall-clock truth: the autotuner's decision loop, the BENCH_7 schema,
+and regression cells for the three timing bugs this PR fixed —
+
+  (a) benchmarks/run.py printed ``us_per_call`` for a whole-table time and
+      crashed persisting heterogeneous rows,
+  (b) launch/train.py synced device→host EVERY step via
+      ``float(metrics["loss"])``,
+  (c) StragglerDetector judged each step against a median that INCLUDED
+      the step itself and was seeded with the compile step.
+"""
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.core import policy as pol
+from repro.kernels import autotune, ops, stats
+from repro.kernels.shapes import block_bitmap
+
+REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _pallas_wr(**kw):
+    return pol.IN_OUT_WR.with_(kernel_impl="pallas", block=(8, 8, 8), **kw)
+
+
+# ---------------------------------------------------------------------------
+# measure(): compile excluded, fenced, median-of-k
+# ---------------------------------------------------------------------------
+
+def test_measure_excludes_compile_and_reports_median():
+    from benchmarks.wallclock import measure
+    calls = {"n": 0}
+
+    def fake_compile_then_fast():
+        calls["n"] += 1
+        if calls["n"] == 1:
+            time.sleep(0.05)               # the "compile" call
+        return jnp.zeros(())
+
+    out = measure(fake_compile_then_fast, warmup=1, reps=5)
+    assert calls["n"] == 6                 # warmup + reps, nothing more
+    assert set(out) == {"us_median", "us_iqr", "reps", "warmup"}
+    # a harness that timed the first call would report >= 50ms here
+    assert 0 < out["us_median"] < 25_000
+    assert out["us_iqr"] >= 0
+
+
+# ---------------------------------------------------------------------------
+# BENCH_7.json: committed artifact validates; mutations are drift
+# ---------------------------------------------------------------------------
+
+def _bench_doc():
+    path = os.path.join(REPO_ROOT, "BENCH_7.json")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_committed_bench_passes_schema():
+    from benchmarks.wallclock import SCHEDULES, check_schema
+    doc = _bench_doc()
+    assert check_schema(doc) == []
+    # acceptance coverage, asserted directly: every schedule measured for
+    # >= 1 CNN and >= 1 FFN GEMM workload, compile-excluded and fenced
+    for fam in ("cnn", "ffn"):
+        got = {r["schedule"] for r in doc["rows"]
+               if r["table"] == "gemm" and r["workload"].startswith(fam)}
+        assert got == set(SCHEDULES), (fam, got)
+    assert {r["workload"].split(":")[0] for r in doc["rows"]
+            if r["table"] == "train_step"} == {"cnn", "ffn"}
+
+
+@pytest.mark.parametrize("mutate,frag", [
+    (lambda d: d.pop("autotune"), "missing top-level"),
+    (lambda d: d["rows"][0].pop("us_median"), "key drift"),
+    (lambda d: d["rows"][0].update(extra=1), "key drift"),
+    (lambda d: d["rows"].__setitem__(
+        slice(None), [r for r in d["rows"]
+                      if not (r["table"] == "gemm"
+                              and r["schedule"] == "compact")]),
+     "missing schedules"),
+    (lambda d: d["autotune"].update(log=[]), "not traceable"),
+])
+def test_schema_mutations_are_drift(mutate, frag):
+    from benchmarks.wallclock import check_schema
+    doc = _bench_doc()
+    mutate(doc)
+    errs = check_schema(doc)
+    assert errs and any(frag in e for e in errs), (frag, errs)
+
+
+def test_cnn_gemm_dims_come_from_the_model():
+    from benchmarks.wallclock import cnn_gemm_dims
+    name, (m, k, n) = cnn_gemm_dims(image_size=8, width=0.125, batch=2)
+    assert name == "cnn:vgg16:conv2:bp_dx"
+    # bp_dx of conv2 at this geometry: M = input pixels, K = Cout·R·S,
+    # N = Cin — straight from CNNModel.gemm_workload, not invented.
+    assert (m, k, n) == (2 * 8 * 8, 8 * 9, 8)
+
+
+# ---------------------------------------------------------------------------
+# Autotune cache: hit / miss / measured retune / drift flip
+# ---------------------------------------------------------------------------
+
+def test_cache_hit_miss_and_measured_flip():
+    cache = autotune.AutotuneCache(window=4, min_samples=2)
+    spec = _pallas_wr().gemm_spec()
+    key = autotune.key_for(spec)
+
+    assert cache.resolve(key, spec).schedule == "compact"   # static default
+    assert (cache.misses, cache.hits) == (1, 0)
+    assert cache.resolve(key, spec).schedule == "compact"   # cache hit
+    assert (cache.misses, cache.hits) == (1, 1)
+
+    for _ in range(3):
+        cache.observe(key, 0.2)
+    got = cache.resolve(key, spec)       # newly measured → explicit retune
+    assert got.schedule == "compact" and cache.retunes == 1
+
+    for _ in range(cache.window):        # synthetic drift: all-live window
+        cache.observe(key, 1.0)
+    assert cache.resolve(key, spec).schedule == "dense"
+    assert cache.retunes == 2
+    events = [r["event"] for r in cache.log]
+    assert events.count("hit") >= 1 and events.count("retune") == 2
+
+
+def test_per_shape_keys_hold_different_schedules():
+    cache = autotune.AutotuneCache(window=4, min_samples=2)
+    spec = _pallas_wr().gemm_spec()
+    ka = autotune.key_for(spec, dims=(32, 16, 24))
+    kb = autotune.key_for(spec, dims=(16, 16, 16))
+    assert ka != kb and ka.padded == (32, 16, 24)
+    for _ in range(3):
+        cache.observe(ka, 0.2)
+        cache.observe(kb, 1.0)
+    assert cache.resolve(ka, spec, dims=(32, 16, 24)).schedule == "compact"
+    assert cache.resolve(kb, spec, dims=(16, 16, 16)).schedule == "dense"
+
+
+def test_key_ignores_schedule_epilogue_and_dtype():
+    spec = _pallas_wr().gemm_spec()
+    post = spec.with_(schedule="predicated", epilogue="sigma_prime",
+                      out_dtype=jnp.bfloat16)
+    # sparse_linear._mm applies with_() AFTER policy resolution; the key
+    # must not split its observation stream from the resolution stream.
+    assert autotune.key_for(spec) == autotune.key_for(post)
+
+
+def test_block_refinement_needs_dims():
+    cache = autotune.AutotuneCache(window=4, min_samples=2)
+    spec = _pallas_wr().gemm_spec()
+    key_nd = autotune.key_for(spec)
+    for _ in range(3):
+        cache.observe(key_nd, 0.8)       # mostly live, still masking
+    # no dims (the linear funnel builds masks at the policy block): the
+    # block must never move
+    assert cache.resolve(key_nd, spec).block == (8, 8, 8)
+    key_d = autotune.key_for(spec, dims=(32, 16, 24))
+    for _ in range(3):
+        cache.observe(key_d, 0.8)
+    got = cache.resolve(key_d, spec, dims=(32, 16, 24), grans=(1, 1, 1))
+    assert got.schedule == "predicated" and got.block == (4, 4, 4)
+
+
+def test_autotune_flip_through_policy_resolution():
+    """End to end through the sanctioned resolution point: eager dispatches
+    with concrete masks drive the policy's resolved schedule from compact
+    to dense, numerics staying exact throughout."""
+    stats.reset()
+    autotune.reset(window=4, min_samples=2)
+    policy = _pallas_wr(autotune=True)
+    m, k, n = 16, 8, 16
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    seen = []
+    for live in [0.0] * 4 + [1.0] * 8:
+        bm = jnp.full((m // 8, n // 8), bool(live)) if live in (0.0, 1.0) \
+            else None
+        spec = policy.gemm_spec()
+        assert spec.origin == "policy"
+        got = ops.sparse_gemm(a, b, ops.GemmMasks(out=bm), spec)
+        seen.append(spec.schedule)
+        expand = jnp.repeat(jnp.repeat(bm, 8, 0), 8, 1)
+        np.testing.assert_allclose(got, (a @ b) * expand,
+                                   rtol=1e-5, atol=1e-5)
+    assert seen[0] == "compact"          # static default while unmeasured
+    assert seen[-1] == "dense"           # measured all-live window
+    assert autotune.get_cache().retunes >= 1
+    assert autotune.log_rows()           # every selection traceable
+
+
+# ---------------------------------------------------------------------------
+# (a) run.py: honest header + union-of-keys CSV persistence
+# ---------------------------------------------------------------------------
+
+def test_run_header_is_us_total():
+    from benchmarks.run import HEADER
+    assert HEADER == "name,us_total,derived"
+
+
+def test_write_rows_heterogeneous(tmp_path):
+    """fieldnames=rows[0].keys() raised ValueError on any row with a key
+    the first row lacked; union-of-keys + restval must take it."""
+    from benchmarks.run import write_rows
+    rows = [{"a": 1, "b": 2}, {"a": 3, "c": 4}]
+    path = str(tmp_path / "t.csv")
+    write_rows(path, rows)
+    lines = open(path).read().splitlines()
+    assert lines[0] == "a,b,c"           # union, first-seen order
+    assert lines[1:] == ["1,2,", "3,,4"]
+
+
+# ---------------------------------------------------------------------------
+# (c) StragglerDetector: self-exclusion + compile skip
+# ---------------------------------------------------------------------------
+
+def test_straggler_median_excludes_current_sample():
+    from repro.launch.train import StragglerDetector
+    det = StragglerDetector(window=8, threshold=2.0, min_history=8,
+                            skip_first=False)
+    for i, dt in enumerate([1.0] * 4 + [3.0] * 4):
+        assert not det.observe(i, dt)
+    # trailing median excluding the candidate is 2.0 → 5.0 flags (5 > 4);
+    # the old self-inclusive median was 3.0 → 5.0 excused itself (5 < 6).
+    assert det.observe(8, 5.0)
+    assert det.flags == [(8, 5.0, 2.0)]
+
+
+def test_straggler_skips_compile_step():
+    from repro.launch.train import StragglerDetector
+    det = StragglerDetector(window=8, threshold=2.0, min_history=4)
+    assert not det.observe(0, 50.0)      # compile+execute: not history
+    assert det.times == []
+    for i in range(1, 5):
+        assert not det.observe(i, 0.1)
+    assert det.observe(5, 0.3)           # 0.3 > 2 × median(0.1)
+    assert 50.0 not in det.times         # the old seed poisoned the median
+
+
+# ---------------------------------------------------------------------------
+# (b) train_loop: loss stays on device until the loop ends
+# ---------------------------------------------------------------------------
+
+def test_train_loop_defers_loss_materialization(monkeypatch):
+    from repro.configs import SMOKE_ARCHS
+    from repro.configs.base import TrainConfig
+    from repro.launch.train import train_loop
+
+    steps_done = {"n": 0}
+    float_at_step = []
+
+    class LossProxy:
+        def __init__(self, v):
+            self.v = v
+
+        def __float__(self):
+            float_at_step.append(steps_done["n"])
+            return float(self.v)
+
+    real_jit = jax.jit
+
+    def spy_jit(fn, **kw):
+        jitted = real_jit(fn, **kw)
+        if kw.get("donate_argnums") != (0, 1):
+            return jitted                # only wrap the train-step jit
+
+        def wrapped(*a):
+            p, o, m = jitted(*a)
+            steps_done["n"] += 1
+            m = dict(m)
+            m["loss"] = LossProxy(m["loss"])
+            return p, o, m
+        return wrapped
+
+    monkeypatch.setattr(jax, "jit", spy_jit)
+    steps = 3
+    out = train_loop(SMOKE_ARCHS["smollm-360m"],
+                     TrainConfig(total_steps=steps, learning_rate=1e-3),
+                     batch_size=2, seq_len=8, steps=steps, ckpt_dir=None,
+                     log_every=0)
+    # Every float() of a loss happened AFTER the final step dispatched —
+    # the old per-step float(metrics["loss"]) yields [1, 2, 3] here.
+    assert float_at_step == [steps] * steps
+    assert [isinstance(l, float) for l in out["losses"]] == [True] * steps
+
+
+def test_train_loop_syncs_only_for_consumers():
+    """With a metrics consumer the values it receives are host floats."""
+    from repro.configs import SMOKE_ARCHS
+    from repro.configs.base import TrainConfig
+    from repro.launch.train import train_loop
+
+    got = []
+    train_loop(SMOKE_ARCHS["smollm-360m"],
+               TrainConfig(total_steps=2, learning_rate=1e-3),
+               batch_size=2, seq_len=8, steps=2, ckpt_dir=None,
+               log_every=0, on_metrics=lambda s, m: got.append((s, m)))
+    assert [s for s, _ in got] == [0, 1]
+    for _, m in got:
+        assert isinstance(m["loss"], float)
+        assert {"time_s", "straggler"} <= set(m)
