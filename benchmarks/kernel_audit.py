@@ -256,10 +256,59 @@ def bitmap_op_audit() -> Tuple[List[dict], str]:
                                           policy) ** 2).sum(),
         dense_dw, (xc, wdw))
 
+    # --- training-workload gate: the hot path is scan-free -------------
+    # PR-8 contract: every dy bitmap is emitted by the producing GEMM's
+    # bitmap_emit epilogue, so a FULL training step records ZERO standalone
+    # bitmap scans (scan_pallas:* AND the xla_ref scan:* keys) — checked on
+    # real network steps, not just the per-unit cells above.  Any nonzero
+    # scan count fails the audit (run.py exits nonzero for named tables).
+    from repro.data.pipeline import image_batch
+    from repro.models.cnn import build_cnn
+    from repro.models.ffn import FFNConfig, ffn_apply, ffn_init
+
+    def _scan_free_step(label, loss_fn, params):
+        stats.reset()
+        grads = jax.grad(loss_fn)(params)
+        finite = all(bool(np.all(np.isfinite(np.asarray(l))))
+                     for l in jax.tree.leaves(grads))
+        c = stats.counts()
+        n_scan = sum(v for k, v in c.items()
+                     if k.startswith("scan_pallas:") or k.startswith("scan:"))
+        n_emit = c.get("emit:grad", 0)
+        rows.append({"path": label, "bitmap_ops_act": stats.total("act"),
+                     "bitmap_ops_grad": stats.total("grad"),
+                     "seed_ops_act": "-", "gemm_launches":
+                         stats.gemm_launches(), "exact_vs_dense": "-",
+                     "scan_ops": n_scan, "emit_ops": n_emit,
+                     "finite": finite})
+        assert n_scan == 0, (label, c)
+        assert n_emit >= 1, (label, c)
+        assert finite, label
+        return n_scan
+
+    img, labels = image_batch(0, 0, batch=1, image_size=8, num_classes=10)
+    scans = 0
+    for net, width in (("vgg16", 0.0625), ("mobilenet", 0.0625)):
+        model = build_cnn(net, image_size=8, width=width, num_classes=10)
+        p0 = model.init(jax.random.key(0))
+        scans += _scan_free_step(
+            f"train:{net}",
+            lambda q, _m=model: _m.loss(q, img, labels, policy), p0)
+
+    cfg = FFNConfig(d_model=16, d_ff=32, activation="relu",
+                    sparse_policy=policy)
+    fp = ffn_init(jax.random.key(1), cfg)
+    xin = jnp.asarray(rng.standard_normal((32, 16)), jnp.float32)
+    yt = jnp.asarray(rng.standard_normal((32, 16)), jnp.float32)
+    scans += _scan_free_step(
+        "train:ffn_relu",
+        lambda q: jnp.mean((ffn_apply(q, xin, cfg) - yt) ** 2), fp)
+
     return rows, (
         f"act_matmul_bitmaps_per_act={n_mm} relu_conv_bitmaps_per_act={n_cv} "
         f"depthwise_bitmaps_per_act={n_dw} (seed>=3) "
-        f"exact={e_mm and e_cv and e_g2 and e_dw}")
+        f"exact={e_mm and e_cv and e_g2 and e_dw} "
+        f"train_step_scan_ops={scans}")
 
 
 # ---------------------------------------------------------------------------

@@ -32,6 +32,16 @@ Tables (one CSV each under benchmarks/results/, all rows in BENCH_7.json):
 validates the exact key set per table and the acceptance coverage (every
 schedule measured for ≥1 CNN and ≥1 FFN workload); CI runs the smoke
 geometry and fails on drift.  See docs/benchmarking.md.
+
+``BENCH_8.json`` is the fused-emit evidence (PR 8): one ``emit`` table
+comparing, per backward-dX workload × pallas schedule, the SAME GEMM run
+three ways — ``plain`` (no bitmap), ``fused`` (σ′ + ``bitmap_emit`` staged
+in the epilogue, one launch returning ``(out, bits)``), and ``gemm_scan``
+(σ′ GEMM then a standalone ``kernels.bitmap_scan`` over the output — the
+pre-PR-8 two-launch pipeline).  ``check_emit_schema`` validates the key
+set, the coverage, and — on full-geometry documents, i.e. the committed
+artifact — the headline claim: fused strictly beats GEMM-then-scan on
+every (workload, schedule) cell.
 """
 from __future__ import annotations
 
@@ -52,17 +62,23 @@ import jax.numpy as jnp
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BENCH_PATH = os.path.join(REPO_ROOT, "BENCH_7.json")
+BENCH8_PATH = os.path.join(REPO_ROOT, "BENCH_8.json")
 
 SCHEMA_VERSION = 1
 SCHEDULES = ("predicated", "compact", "dense")
+EMIT_SCHEDULES = ("predicated", "compact")   # the pallas emit-capable pair
+EMIT_VARIANTS = ("plain", "fused", "gemm_scan")
 
-# The exact per-table row key sets BENCH_7.json commits to.  check_schema
-# fails on ANY deviation — added keys are drift just like missing ones.
+# The exact per-table row key sets the BENCH files commit to.  The schema
+# checkers fail on ANY deviation — added keys are drift just like missing.
 ROW_KEYS = {
     "gemm": ("table", "workload", "schedule", "m", "k", "n", "groups",
              "block", "us_median", "us_iqr", "reps", "warmup"),
     "train_step": ("table", "workload", "schedule", "batch", "params",
                    "us_median", "us_iqr", "reps", "warmup"),
+    "emit": ("table", "workload", "schedule", "variant", "m", "k", "n",
+             "groups", "block", "emit_gran", "us_median", "us_iqr",
+             "reps", "warmup"),
 }
 AUTOTUNE_LOG_KEYS = ("seq", "event", "key", "shape", "groups", "schedule",
                      "block", "live_frac", "operand_frac", "samples")
@@ -123,18 +139,18 @@ def _blocky(key, shape: Tuple[int, int], block2: Tuple[int, int],
 
 
 def cnn_gemm_dims(*, image_size: int, width: float, batch: int,
-                  layer: str = "conv2", stage: str = "bp_dx"
-                  ) -> Tuple[str, Tuple[int, int, int]]:
+                  layer: str = "conv2", stage: str = "bp_dx",
+                  net: str = "vgg16") -> Tuple[str, Tuple[int, int, int]]:
     """One (M, K, N) from the CNN's OWN workload description — the dims a
     real training step hands the dispatcher, not invented round numbers."""
     from repro.models.cnn import build_cnn
-    model = build_cnn("vgg16", image_size=image_size, width=width,
+    model = build_cnn(net, image_size=image_size, width=width,
                       num_classes=10)
     for row in model.gemm_workload(batch):
         if row["layer"] == layer and row["stage"] == stage:
-            name = f"cnn:vgg16:{layer}:{stage}"
+            name = f"cnn:{net}:{layer}:{stage}"
             return name, (row["m"], row["k"], row["n"])
-    raise KeyError(f"{layer}/{stage} not in vgg16 workload")
+    raise KeyError(f"{layer}/{stage} not in {net} workload")
 
 
 def bench_gemm_rows(*, smoke: bool) -> List[dict]:
@@ -189,6 +205,111 @@ def bench_gemm_rows(*, smoke: bool) -> List[dict]:
                 "block": "x".join(map(str, spec.block)),
                 **measure(lambda: fn(a, b, masks), **timing),
             })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fused bitmap emission vs GEMM-then-scan (the BENCH_8 evidence)
+# ---------------------------------------------------------------------------
+
+def bench_emit_rows(*, smoke: bool) -> List[dict]:
+    """One measured row per workload × pallas schedule × variant.
+
+    The workload is the paper's hot GEMM — backward dX (``dy @ Wᵀ``) with
+    the σ′ mask killing output tiles — and the variants are the same GEMM
+    run three ways on identical operands and masks:
+
+      * ``plain``      σ′ epilogue only (no bitmap anywhere) — the floor;
+      * ``fused``      σ′ + ``bitmap_emit`` staged in the epilogue: ONE
+                       launch returns ``(out, bits)``, thresholding each
+                       accumulator tile at writeback;
+      * ``gemm_scan``  σ′ GEMM, then a standalone ``kernels.bitmap_scan``
+                       re-reads the output — the pre-PR-8 pipeline this
+                       epilogue deletes from the training hot path.
+
+    The committed (full-geometry) BENCH_8.json must show fused < gemm_scan
+    on every cell (``check_emit_schema`` enforces it).
+
+    Workload choice: the structural advantage of the emit epilogue is that
+    it runs only on LIVE output tiles inside the producing launch, while
+    the standalone scan re-reads EVERY tile of the output — so the honest
+    showcase is the paper's sparse-dy regime (25% live σ′ tiles) on
+    backward-dX geometries whose output is large relative to the reduction
+    axis: a MobileNet pointwise conv's dX (K = Cout of a 1×1 kernel) and
+    an FFN down-projection's dX.  The compact schedule is bounded to the
+    drawn live-tile count (the WDU capacity a trained step would carry)."""
+    import numpy as np
+
+    from repro.core import policy as pol
+    from repro.kernels import ops
+    from repro.kernels.shapes import block_bitmap
+
+    block = (8, 32, 8)
+    emit_gran = (block[0], block[2])
+    live = 0.25
+    timing = dict(warmup=1, reps=3) if smoke else dict(warmup=2, reps=9)
+    geo = dict(image_size=32, width=0.5, batch=2 if smoke else 8,
+               layer="pw1", net="mobilenet")
+
+    cnn_name, cnn_dims = cnn_gemm_dims(**geo)
+    ffn_tokens = 256 if smoke else 1024
+    workloads = [
+        (cnn_name, cnn_dims),
+        # the down-projection's backward dX GEMM: dL/dh = g @ W_downᵀ with
+        # the hidden ReLU mask killing output tiles (paper's core GEMM)
+        ("ffn:relu_bwd_dx", (ffn_tokens, 32, 64)),
+    ]
+    schedule_policies = {
+        "predicated": pol.IN_OUT.with_(kernel_impl="pallas", block=block),
+        "compact": pol.IN_OUT_WR.with_(kernel_impl="pallas", block=block),
+    }
+
+    rows: List[dict] = []
+    for wname, (m, k, n) in workloads:
+        key = jax.random.key(hash(("emit", wname)) % (2 ** 31))
+        ka, kb_, km = jax.random.split(key, 3)
+        dy = jax.random.normal(ka, (m, k), jnp.float32)
+        wt = jax.random.normal(kb_, (k, n), jnp.float32)
+        # σ′ footprint: block-structured so the out mask has dead tiles
+        _, mult_bm = _blocky(km, (m, n), (block[0], block[2]), live)
+        mult = jnp.repeat(jnp.repeat(mult_bm, block[0], 0),
+                          block[2], 1)[:m, :n].astype(jnp.float32)
+        n_live = int(np.asarray(mult_bm).sum())
+        for sched, policy in schedule_policies.items():
+            base = policy.gemm_spec()
+            assert base.schedule == sched, (base.schedule, sched)
+            if sched == "compact":
+                base = base.with_(max_active_blocks=n_live)
+            masks = ops.GemmMasks(out=block_bitmap(mult, block[0], block[2]))
+            spec_p = base.with_(epilogue=("sigma_prime",))
+            spec_f = base.with_(epilogue=("sigma_prime", "bitmap_emit"),
+                                emit_gran=emit_gran)
+
+            def plain(a_, b_, masks_, mult_):
+                return ops.sparse_gemm(a_, b_, masks_, spec_p,
+                                       epilogue_mult=mult_)
+
+            def fused(a_, b_, masks_, mult_):
+                return ops.sparse_gemm(a_, b_, masks_, spec_f,
+                                       epilogue_mult=mult_)
+
+            def gemm_scan(a_, b_, masks_, mult_):
+                out = ops.sparse_gemm(a_, b_, masks_, spec_p,
+                                      epilogue_mult=mult_)
+                return out, ops.bitmap_scan(out, block=emit_gran,
+                                            kind="grad")
+
+            for variant, fn in (("plain", plain), ("fused", fused),
+                                ("gemm_scan", gemm_scan)):
+                jfn = jax.jit(fn)
+                rows.append({
+                    "table": "emit", "workload": wname, "schedule": sched,
+                    "variant": variant, "m": m, "k": k, "n": n,
+                    "groups": base.groups,
+                    "block": "x".join(map(str, block)),
+                    "emit_gran": "x".join(map(str, emit_gran)),
+                    **measure(lambda: jfn(dy, wt, masks, mult), **timing),
+                })
     return rows
 
 
@@ -388,6 +509,77 @@ def check_schema(doc: dict) -> List[str]:
     return errs
 
 
+def check_emit_schema(doc: dict) -> List[str]:
+    """Validate a BENCH_8 document; returns a list of problems (empty ⇒
+    OK).  Checks the exact ``emit`` row key set, the coverage (every
+    variant measured for both pallas schedules on ≥1 CNN and ≥1 FFN
+    backward-dX workload), positive fenced medians, AND — on
+    full-geometry documents (the committed artifact) — the headline
+    claim: fused σ′+emit strictly beats GEMM-then-scan on every cell.
+    Smoke documents skip only the claim: reduced reps on shared CI
+    runners make a strict wall-clock inequality a coin-flip; the
+    committed full-geometry run is the evidence the PR stands on."""
+    errs: List[str] = []
+    for top in ("schema_version", "bench", "jax_backend", "geometry",
+                "rows"):
+        if top not in doc:
+            errs.append(f"missing top-level key {top!r}")
+    if errs:
+        return errs
+    if doc["schema_version"] != SCHEMA_VERSION:
+        errs.append(f"schema_version {doc['schema_version']} != "
+                    f"{SCHEMA_VERSION}")
+    if doc["bench"] != "BENCH_8":
+        errs.append(f"bench {doc['bench']!r} != 'BENCH_8'")
+
+    want = set(ROW_KEYS["emit"])
+    cells: Dict[Tuple[str, str], Dict[str, float]] = {}
+    seen: Dict[str, set] = {"cnn": set(), "ffn": set()}
+    for i, row in enumerate(doc["rows"]):
+        if row.get("table") != "emit":
+            errs.append(f"rows[{i}]: unknown table {row.get('table')!r}")
+            continue
+        got = set(row)
+        if got != want:
+            errs.append(f"rows[{i}] (emit): key drift "
+                        f"+{sorted(got - want)} -{sorted(want - got)}")
+            continue
+        if row["schedule"] not in EMIT_SCHEDULES:
+            errs.append(f"rows[{i}]: unknown schedule {row['schedule']!r}")
+        if row["variant"] not in EMIT_VARIANTS:
+            errs.append(f"rows[{i}]: unknown variant {row['variant']!r}")
+            continue
+        if not (isinstance(row["us_median"], (int, float))
+                and row["us_median"] > 0):
+            errs.append(f"rows[{i}] (emit): non-positive us_median")
+            continue
+        fam = row["workload"].split(":", 1)[0]
+        if fam in seen:
+            seen[fam].add((row["schedule"], row["variant"]))
+        cells.setdefault((row["workload"], row["schedule"]), {})[
+            row["variant"]] = row["us_median"]
+
+    full = {(s, v) for s in EMIT_SCHEDULES for v in EMIT_VARIANTS}
+    for fam, got in seen.items():
+        missing = sorted(full - got)
+        if missing:
+            errs.append(f"emit coverage: {fam} workload missing cells "
+                        f"{missing}")
+
+    if doc.get("geometry") != "full":
+        return errs                       # claim gated on committed runs
+    for (wname, sched), by_variant in sorted(cells.items()):
+        if set(by_variant) != set(EMIT_VARIANTS):
+            continue                      # coverage error already reported
+        if not by_variant["fused"] < by_variant["gemm_scan"]:
+            errs.append(
+                f"claim: fused ({by_variant['fused']}us) not faster than "
+                f"gemm_scan ({by_variant['gemm_scan']}us) on "
+                f"{wname}/{sched} — the emit epilogue must beat the "
+                f"two-launch pipeline")
+    return errs
+
+
 # ---------------------------------------------------------------------------
 # Driver
 # ---------------------------------------------------------------------------
@@ -406,6 +598,16 @@ def run_bench(*, smoke: bool = False) -> dict:
     }
 
 
+def run_emit_bench(*, smoke: bool = False) -> dict:
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "bench": "BENCH_8",
+        "jax_backend": jax.default_backend(),
+        "geometry": "smoke" if smoke else "full",
+        "rows": bench_emit_rows(smoke=smoke),
+    }
+
+
 def write_outputs(doc: dict, out_path: str) -> None:
     from benchmarks.run import RESULTS_DIR, write_rows
     with open(out_path, "w") as f:
@@ -417,9 +619,14 @@ def write_outputs(doc: dict, out_path: str) -> None:
         by_table.setdefault(row["table"], []).append(row)
     for table, rows in by_table.items():
         write_rows(os.path.join(RESULTS_DIR, f"wallclock_{table}.csv"), rows)
-    if doc["autotune"]["log"]:
+    if doc.get("autotune", {}).get("log"):
         write_rows(os.path.join(RESULTS_DIR, "wallclock_autotune.csv"),
                    doc["autotune"]["log"])
+
+
+def _checker_for(doc: dict):
+    return check_emit_schema if doc.get("bench") == "BENCH_8" \
+        else check_schema
 
 
 def main(argv=None) -> int:
@@ -428,32 +635,40 @@ def main(argv=None) -> int:
                     help="reduced geometry + fewer reps (CI)")
     ap.add_argument("--out", default=BENCH_PATH,
                     help="BENCH JSON path (default: repo-root BENCH_7.json)")
+    ap.add_argument("--emit-out", default=BENCH8_PATH,
+                    help="BENCH_8 (emit table) JSON path (default: "
+                         "repo-root BENCH_8.json)")
     ap.add_argument("--check", metavar="PATH",
-                    help="validate an existing BENCH file and exit")
+                    help="validate an existing BENCH file and exit "
+                         "(the checker is picked by the file's 'bench' key)")
     args = ap.parse_args(argv)
 
     if args.check:
         with open(args.check) as f:
-            errs = check_schema(json.load(f))
+            doc = json.load(f)
+        errs = _checker_for(doc)(doc)
         for e in errs:
             print(f"SCHEMA: {e}", file=sys.stderr)
         print(f"{args.check}: {'DRIFT' if errs else 'ok'}")
         return 1 if errs else 0
 
     doc = run_bench(smoke=args.smoke)
-    errs = check_schema(doc)
+    doc8 = run_emit_bench(smoke=args.smoke)
+    errs = check_schema(doc) + check_emit_schema(doc8)
     if errs:
         for e in errs:
             print(f"SCHEMA: {e}", file=sys.stderr)
         return 1
     write_outputs(doc, args.out)
-    for row in doc["rows"]:
-        print(f"{row['table']},{row['workload']},{row['schedule']},"
+    write_outputs(doc8, args.emit_out)
+    for row in doc["rows"] + doc8["rows"]:
+        tag = f":{row['variant']}" if row["table"] == "emit" else ""
+        print(f"{row['table']},{row['workload']},{row['schedule']}{tag},"
               f"{row['us_median']:.0f}us ±{row['us_iqr']:.0f}")
     c = doc["autotune"]["counters"]
     print(f"autotune: hits={c['hits']} misses={c['misses']} "
           f"retunes={c['retunes']} log_rows={len(doc['autotune']['log'])}")
-    print(f"wrote {args.out}")
+    print(f"wrote {args.out} and {args.emit_out}")
     return 0
 
 

@@ -285,14 +285,19 @@ def run_predicated_grouped(
     out_mask: np.ndarray, a_mask: np.ndarray, b_mask: np.ndarray,
     *, bm: int, bk: int, bn: int,
     epilogue_mult: Optional[np.ndarray] = None,   # (G, M, N)
+    emit_gran: Optional[Tuple[int, int]] = None,  # bitmap_emit granularity
     kernel_fn: Optional[Callable] = None,
     workload: str = "",
 ):
-    """Shadow-run the grouped predicated kernel over grid (G, Mb, Nb, Kb)."""
+    """Shadow-run the grouped predicated kernel over grid (G, Mb, Nb, Kb).
+
+    With ``emit_gran`` the emitted-bitmap output gets its own shadow ref:
+    its stores are bounds-checked and held to the same exactly-one-
+    writeback-per-tile contract as the data output."""
     mmk = importlib.import_module("repro.kernels.masked_matmul")
     if kernel_fn is None:
-        kernel_fn = (mmk._gmm_kernel if epilogue_mult is None
-                     else mmk._gmm_epilogue_kernel)
+        kernel_fn = mmk.gmm_kernel_variant(epilogue_mult is not None,
+                                           emit_gran)
     g, m, k = a.shape
     n = b.shape[2]
     ni, nj, nk = m // bm, n // bn, k // bk
@@ -304,6 +309,10 @@ def run_predicated_grouped(
     b_s = input_ref(b, "b_ref")
     mult_s = None if epilogue_mult is None \
         else input_ref(np.asarray(epilogue_mult, np.float32), "mult_ref")
+    bits = None
+    if emit_gran is not None:
+        er, ec = emit_gran
+        bits = ShadowRef((g, m // er, n // ec), np.int32, "bits_ref")
     om = np.asarray(out_mask, np.int32)
     am = np.asarray(a_mask, np.int32)
     bmsk = np.asarray(b_mask, np.int32)
@@ -321,6 +330,10 @@ def run_predicated_grouped(
         if mult_s is not None:
             refs.append(RefView(mult_s, _tile3(gi, i, j, bm, bn), san))
         refs.append(RefView(o, _tile3(gi, i, j, bm, bn), san))
+        if bits is not None:
+            er, ec = emit_gran
+            refs.append(RefView(
+                bits, _tile3(gi, i, j, bm // er, bn // ec), san))
         refs.append(RefView(acc, (slice(None), slice(None)), san))
         kernel_fn(om, am, bmsk, *refs)
 
@@ -328,6 +341,12 @@ def run_predicated_grouped(
     tiles = [(f"(g={gi},i={i},j={j})", _tile3(gi, i, j, bm, bn))
              for gi in range(g) for i in range(ni) for j in range(nj)]
     _check_single_writeback(san, o, tiles)
+    if bits is not None:
+        er, ec = emit_gran
+        btiles = [(f"bits(g={gi},i={i},j={j})",
+                   _tile3(gi, i, j, bm // er, bn // ec))
+                  for gi in range(g) for i in range(ni) for j in range(nj)]
+        _check_single_writeback(san, bits, btiles)
     return san.violations, o.data
 
 
@@ -338,14 +357,15 @@ def run_compact_grouped(
     a_mask: np.ndarray, b_mask: np.ndarray,
     *, bm: int, bk: int, bn: int,
     epilogue_mult: Optional[np.ndarray] = None,   # (G, M, N)
+    emit_gran: Optional[Tuple[int, int]] = None,  # bitmap_emit granularity
     kernel_fn: Optional[Callable] = None,
     workload: str = "",
 ):
     """Shadow-run the grouped compacted kernel over grid (S, Kb)."""
     mmk = importlib.import_module("repro.kernels.masked_matmul")
     if kernel_fn is None:
-        kernel_fn = (mmk._gmm_compact_kernel if epilogue_mult is None
-                     else mmk._gmm_compact_epilogue_kernel)
+        kernel_fn = mmk.gmm_compact_kernel_variant(epilogue_mult is not None,
+                                                   emit_gran)
     k = a.shape[2]
     nk = k // bk
     gg = np.asarray(gg, np.int32)
@@ -360,6 +380,10 @@ def run_compact_grouped(
     b_s = input_ref(b, "b_ref")
     mult_s = None if epilogue_mult is None \
         else input_ref(np.asarray(epilogue_mult, np.float32), "mult_ref")
+    bits = None
+    if emit_gran is not None:
+        er, ec = emit_gran
+        bits = ShadowRef((s_cap, bm // er, bn // ec), np.int32, "bits_ref")
     na = np.asarray(n_active, np.int32)
     am = np.asarray(a_mask, np.int32)
     bmsk = np.asarray(b_mask, np.int32)
@@ -379,6 +403,9 @@ def run_compact_grouped(
             refs.append(RefView(mult_s, _tile3(gi, i, j, bm, bn), san))
         refs.append(RefView(
             o, (slice(s, s + 1), slice(None), slice(None)), san))
+        if bits is not None:
+            refs.append(RefView(
+                bits, (slice(s, s + 1), slice(None), slice(None)), san))
         refs.append(RefView(acc, (slice(None),) * 3, san))
         kernel_fn(gg, ii, jj, na, am, bmsk, *refs)
 
@@ -386,6 +413,11 @@ def run_compact_grouped(
     tiles = [(f"(s={s})", (slice(s, s + 1), slice(None), slice(None)))
              for s in range(s_cap)]
     _check_single_writeback(san, o, tiles)
+    if bits is not None:
+        btiles = [(f"bits(s={s})", (slice(s, s + 1), slice(None),
+                                    slice(None)))
+                  for s in range(s_cap)]
+        _check_single_writeback(san, bits, btiles)
     return san.violations, o.data
 
 
@@ -493,6 +525,15 @@ def sanitize_all() -> List[Violation]:
                                    epilogue_mult=mult,
                                    workload="predicated:epilogue")
     out += vs
+    # bitmap_emit writeback stage: alone, and composed with sigma_prime.
+    vs, _ = run_predicated_grouped(a, b, om, am, bmm, bm=bsz, bk=bsz, bn=bsz,
+                                   emit_gran=(2, 2),
+                                   workload="predicated:emit")
+    out += vs
+    vs, _ = run_predicated_grouped(a, b, om, am, bmm, bm=bsz, bk=bsz, bn=bsz,
+                                   epilogue_mult=mult, emit_gran=(2, 2),
+                                   workload="predicated:epilogue+emit")
+    out += vs
 
     # Compacted schedule over the real queue of the same out-mask.
     ni = m // bsz
@@ -508,6 +549,15 @@ def sanitize_all() -> List[Violation]:
     vs, _ = run_compact_grouped(a, b, gg, ii, fjj, na, am, bmm,
                                 bm=bsz, bk=bsz, bn=bsz, epilogue_mult=mult,
                                 workload="compact:epilogue")
+    out += vs
+    vs, _ = run_compact_grouped(a, b, gg, ii, fjj, na, am, bmm,
+                                bm=bsz, bk=bsz, bn=bsz, emit_gran=(2, 2),
+                                workload="compact:emit")
+    out += vs
+    vs, _ = run_compact_grouped(a, b, gg, ii, fjj, na, am, bmm,
+                                bm=bsz, bk=bsz, bn=bsz, epilogue_mult=mult,
+                                emit_gran=(2, 2),
+                                workload="compact:epilogue+emit")
     out += vs
 
     for label, bmp, cap in [

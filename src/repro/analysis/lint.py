@@ -4,11 +4,10 @@ The spec-driven redesign (docs/gemm_api.md) has one load-bearing social
 contract: NOBODY outside ``kernels/`` re-grows the pre-redesign call style.
 These rules make that machine-checked:
 
-  SHIM_CALL      no new ``masked_matmul`` / ``grouped_masked_matmul`` call
-                 sites outside ``kernels/`` — those are warn-once
-                 deprecation shims, kept only for external callers and the
-                 frozen-reference comparisons (``ref.masked_matmul``, the
-                 pure-jnp oracle, stays allowed anywhere).
+  SHIM_CALL      no ``masked_matmul`` / ``grouped_masked_matmul`` call
+                 sites anywhere — the warn-once deprecation shims are
+                 DELETED (PR 8); only the frozen-reference comparisons
+                 (``ref.masked_matmul``, the pure-jnp oracle) stay allowed.
   LOOSE_KWARG    no caller outside ``kernels/`` threads the old loose
                  kwargs (``compact=``, ``queue_builder=``,
                  ``fuse_epilogue=``) through a call — schedule/queue/
@@ -47,7 +46,8 @@ LOOSE_KWARGS = {"compact", "queue_builder", "fuse_epilogue"}
 # replace fields: policy and spec construction IS the sanctioned home.
 SPEC_CALLEES = {"SparsityPolicy", "GemmSpec", "with_", "replace",
                 "gemm_spec", "dataclasses.replace"}
-KNOWN_KEY_HEADS = {"encode", "scan", "scan_pallas", "queue", "gemm", "conv",
+KNOWN_KEY_HEADS = {"encode", "scan", "scan_pallas", "emit", "queue", "gemm",
+                   "conv",
                    # legacy heads normalized by stats._KEY_ALIASES:
                    "mm", "gmm", "grouped_mm"}
 FALLBACK_KEY = "conv:dense_fallback"
@@ -145,12 +145,13 @@ def lint_source(code: str, path: str = "<string>",
         name = parts[-1] if parts else ""
         base = parts[-2] if len(parts) >= 2 else ""
 
-        # SHIM_CALL — deprecated orchestrator call site outside kernels/
-        if not in_kernels and name in SHIM_NAMES and base not in REF_BASES \
+        # SHIM_CALL — deleted-orchestrator call site (no kernels/ allowance:
+        # the shims are gone, so such a call breaks at runtime anywhere)
+        if name in SHIM_NAMES and base not in REF_BASES \
                 and ("SHIM_CALL", node.lineno) not in waived:
             out.append(Violation(
                 "lint", "SHIM_CALL", where,
-                f"call to deprecated kernels.ops.{name}; build a GemmSpec "
+                f"call to removed kernels.ops.{name}; build a GemmSpec "
                 f"and call sparse_gemm (docs/gemm_api.md)"))
 
         # LOOSE_KWARG — pre-redesign kwargs threaded outside kernels/

@@ -65,6 +65,16 @@ class SparsityPolicy:
     fuse_epilogue: bool = True            # BP: σ'-Hadamard inside the kernel
                                           # (False = separate VPU pass, for
                                           # ablating the fused writeback)
+    scan_signed_inputs: bool = False      # FP: opt-in standalone bitmap_scan
+                                          # of signed RAW model inputs (no
+                                          # ReLU to fuse into).  Off by
+                                          # default: the first layer's input
+                                          # is near-dense, so the scan rarely
+                                          # pays for itself — and with dy
+                                          # bitmaps emitted by the producing
+                                          # GEMM's epilogue, the training hot
+                                          # path then launches ZERO
+                                          # scan_pallas:* passes
     autotune: bool = False                # measured-stats schedule/tile
                                           # selection: gemm_spec consults the
                                           # kernels/autotune cache (keyed on

@@ -68,7 +68,12 @@ from repro.kernels.shapes import block_bitmap as _bitmap_padded
 from .policy import SparsityPolicy
 from .sparse_linear import _mm, _needs_act_bitmap, _needs_grad_bitmap
 from .sparse_tensor import (
-    SparseTensor, coarsen_bitmap, conv_channel_granularity, scan_bitmap,
+    SparseTensor,
+    coarsen_bitmap,
+    conv_channel_granularity,
+    lookup_grad_bitmap,
+    register_grad_bitmap,
+    scan_bitmap,
 )
 
 
@@ -201,17 +206,27 @@ def _encode_conv_act(x_pre: jnp.ndarray, policy: SparsityPolicy,
     return x, SparseTensor(x_pre, fb, (1, gc))
 
 
-def _grad_sparse_tensor(dy32: jnp.ndarray, policy: SparsityPolicy,
+def _grad_sparse_tensor(dy, dy32: jnp.ndarray, policy: SparsityPolicy,
                         m: int, groups: int = 1) -> SparseTensor:
-    """Fine bitmap of the incoming gradient — the step's single dy scan
-    (TPU-native ``kernels.bitmap_scan`` on the pallas path)."""
+    """Fine bitmap of the incoming gradient, recovered from the PRODUCING
+    dX GEMM's writeback-emitted bitmap (registered against the exact
+    cotangent object ``dy``) — never a rescan.  A miss (cotangent straight
+    from the loss / a pool / BatchNorm, or an unusable granularity)
+    degrades to no dy mask: skipping lost, numerics untouched."""
     if not _needs_grad_bitmap(policy):
         return SparseTensor(dy32, None, None)
-    n, u, v, _ = dy32.shape
-    gc = conv_channel_granularity(m, policy.block, groups)
-    fb = scan_bitmap(dy32.reshape(n * u * v, m), (1, gc), kind="grad",
-                     impl=policy.kernel_impl, interpret=policy.interpret)
-    return SparseTensor(dy32, fb, (1, gc))
+    hit = lookup_grad_bitmap(dy)
+    if hit is None:
+        return SparseTensor(dy32, None, None)
+    fb, (gr, gcg) = hit
+    bm, bk, bn = policy.block
+    # The conv derivations need per-pixel rows (the bitmap is reshaped to
+    # the (N, U, V, M/gc) spatial view), channel cells nesting inside
+    # groups, and a channel granularity every derived mask edge divides.
+    if (gr != 1 or m % gcg or (m // gcg) % groups
+            or bk % gcg or bn % gcg):
+        return SparseTensor(dy32, None, None)
+    return SparseTensor(dy32, fb, (1, gcg))
 
 
 # ---------------------------------------------------------------------------
@@ -247,11 +262,14 @@ def _conv_engine_fwd(x_in, w, stride, padding, policy: SparsityPolicy,
             x = jnp.maximum(x_in, jnp.zeros((), x_in.dtype))
             st = SparseTensor(x_in, None, None)
     else:
-        # Signed input (pool / input-layer boundary): no fused encode —
-        # one counted scan, TPU-native on the pallas path.
+        # Signed input (pool / input-layer boundary): no fused encode, so a
+        # bitmap costs a standalone scan — opt-in via scan_signed_inputs
+        # (off by default: raw inputs are near-dense, and with dy bitmaps
+        # emitted by the GEMM epilogue the hot path then launches zero
+        # scan_pallas:* passes).
         x = x_in
         st = SparseTensor(x, None, None)
-        if policy.kernel_impl == "pallas" and (
+        if policy.scan_signed_inputs and policy.kernel_impl == "pallas" and (
                 policy.use_input_sparsity_fp or policy.use_input_sparsity_bp):
             gc = conv_channel_granularity(c, policy.block, groups)
             st = SparseTensor(
@@ -311,7 +329,7 @@ def _conv_engine_bwd(stride, padding, policy: SparsityPolicy,
         relu_mask = None
         out_dtype = x.dtype
     dy32 = dy.astype(jnp.float32)
-    st_dy = _grad_sparse_tensor(dy32, policy, m, groups)
+    st_dy = _grad_sparse_tensor(dy, dy32, policy, m, groups)
     t = n * u * v
     cg, mg = c // groups, m // groups
     gc = st.gran[1] if st.gran else 1
@@ -348,6 +366,12 @@ def _conv_engine_bwd(stride, padding, policy: SparsityPolicy,
     mask2d = relu_mask.reshape(n * h * wd, c).astype(jnp.float32) \
         if fused_relu else None
 
+    # This dX GEMM produces the layer BELOW's dy: its writeback epilogue
+    # emits that dy's fine bitmap (per-pixel rows, channel granularity of
+    # THIS layer's input) and registers it against the returned cotangent.
+    emit_gc = conv_channel_granularity(c, policy.block, groups) \
+        if _needs_grad_bitmap(policy) else None
+
     if groups == 1:
         wt = jnp.flip(w, axis=(0, 1)).transpose(0, 1, 3, 2) \
             .reshape(r * s * m, c)
@@ -355,9 +379,13 @@ def _conv_engine_bwd(stride, padding, policy: SparsityPolicy,
         g_mask = None
         if gpb2 is not None:
             g_mask = coarsen_bitmap(gpb2, (1, gcg), (bm, bk))
-        dx = _mm(gm2, wt.astype(jnp.float32), out_mask, g_mask, None, policy,
-                 out_dtype, epilogue=mask2d)
-        dx = dx.reshape(n, h, wd, c)
+        res_dx = _mm(gm2, wt.astype(jnp.float32), out_mask, g_mask, None,
+                     policy, out_dtype, epilogue=mask2d,
+                     emit_gran=None if emit_gc is None else (1, emit_gc))
+        dx2, dx_bits = res_dx if emit_gc is not None else (res_dx, None)
+        dx = dx2.reshape(n, h, wd, c)
+        if emit_gc is not None:
+            register_grad_bitmap(dx, dx_bits, (1, emit_gc))
     else:
         spec = policy.gemm_spec(groups=groups,
                                 dims=(n * h * wd, r * s * mg, cg),
@@ -372,11 +400,17 @@ def _conv_engine_bwd(stride, padding, policy: SparsityPolicy,
             g_mask = coarsen_bitmap(_group_patches(gpb2, r * s, groups),
                                     (1, gcg), (blk[0], blk[1]))
         epi = _group_cols(mask2d, groups) if mask2d is not None else None
-        dxg = _mm(_group_patches(gm2, r * s, groups),
-                  _group_weights_bwd(w, groups).astype(jnp.float32),
-                  out_mask, g_mask, None, policy, out_dtype,
-                  epilogue=epi, spec=spec)
+        res_dx = _mm(_group_patches(gm2, r * s, groups),
+                     _group_weights_bwd(w, groups).astype(jnp.float32),
+                     out_mask, g_mask, None, policy, out_dtype,
+                     epilogue=epi, spec=spec,
+                     emit_gran=None if emit_gc is None else (1, emit_gc))
+        dxg, dxg_bits = res_dx if emit_gc is not None else (res_dx, None)
         dx = _ungroup_cols(dxg).reshape(n, h, wd, c)
+        if emit_gc is not None and dxg_bits is not None:
+            # Per-group bits columns regroup to the full channel axis the
+            # same way the data does (cells nest inside groups: gc | C/G).
+            register_grad_bitmap(dx, _ungroup_cols(dxg_bits), (1, emit_gc))
 
     # ---- dW = patches(x)ᵀ @ dy — WG stage, input sparsity both sides ----
     pad4 = (plh[0], plh[1], plw[0], plw[1])

@@ -44,13 +44,16 @@ from .sparse_tensor import (
     SparseTensor,
     linear_act_granularity,
     linear_grad_granularity,
+    lookup_grad_bitmap,
+    register_grad_bitmap,
     scan_bitmap,
 )
 
 
 def _mm(a, b, out_mask, a_mask, b_mask, policy: SparsityPolicy, out_dtype,
         epilogue: Optional[jnp.ndarray] = None,
-        spec: Optional[GemmSpec] = None):
+        spec: Optional[GemmSpec] = None,
+        emit_gran: Optional[Tuple[int, int]] = None):
     """Route one masked matmul through the ``kernels.ops.sparse_gemm``
     dispatcher, resolving the policy to a ``GemmSpec`` (unless the caller
     already resolved one — the conv engine passes specs carrying degenerate
@@ -60,6 +63,15 @@ def _mm(a, b, out_mask, a_mask, b_mask, policy: SparsityPolicy, out_dtype,
     accumulator writeback (``policy.fuse_epilogue``) or applied as a
     separate elementwise pass (ablation; the "dense" schedule folds it in
     either way — numerics are identical).
+
+    ``emit_gran`` requests the ``bitmap_emit`` writeback stage: the return
+    value becomes ``(out, bits_or_None)`` where ``bits`` is the output's
+    packed any-nonzero bitmap at that granularity, emitted in the same
+    writeback as the (post-σ′) values.  ``None`` bits mean the emission was
+    dropped — the ablation path (bits must describe the post-σ′ values the
+    separate VPU pass hasn't applied yet) or a resolved tile the
+    granularity doesn't divide (autotuning may shrink edges) — and the
+    caller proceeds without a mask, never with a rescan.
 
     3-D operands (leading group axis: (G, M, K) @ (G, K, N)) dispatch as a
     grouped spec — the GEMM form of grouped/depthwise convs, with
@@ -74,12 +86,28 @@ def _mm(a, b, out_mask, a_mask, b_mask, policy: SparsityPolicy, out_dtype,
     if epilogue is not None and spec.schedule != "dense" \
             and not policy.fuse_epilogue:
         out = kops.sparse_gemm(
-            a, b, masks, spec.with_(epilogue="none", out_dtype=jnp.float32))
-        return (out * epilogue.astype(jnp.float32)).astype(out_dtype)
-    spec = spec.with_(
-        epilogue="sigma_prime" if epilogue is not None else "none",
-        out_dtype=out_dtype)
-    return kops.sparse_gemm(a, b, masks, spec, epilogue_mult=epilogue)
+            a, b, masks,
+            spec.with_(epilogue="none", emit_gran=None,
+                       out_dtype=jnp.float32))
+        out = (out * epilogue.astype(jnp.float32)).astype(out_dtype)
+        return (out, None) if emit_gran is not None else out
+    if emit_gran is not None and (spec.block[0] % emit_gran[0]
+                                  or spec.block[2] % emit_gran[1]):
+        emit_gran = None
+        dropped_emit = True
+    else:
+        dropped_emit = False
+    stages = []
+    if epilogue is not None:
+        stages.append("sigma_prime")
+    if emit_gran is not None:
+        stages.append("bitmap_emit")
+    spec = spec.with_(epilogue=tuple(stages), emit_gran=emit_gran,
+                      out_dtype=out_dtype)
+    res = kops.sparse_gemm(a, b, masks, spec, epilogue_mult=epilogue)
+    if dropped_emit:
+        return res, None
+    return res
 
 
 def _needs_act_bitmap(policy: SparsityPolicy) -> bool:
@@ -94,6 +122,28 @@ def _needs_act_bitmap(policy: SparsityPolicy) -> bool:
 
 def _needs_grad_bitmap(policy: SparsityPolicy) -> bool:
     return policy.kernel_impl == "pallas" and policy.use_input_sparsity_bp
+
+
+def _grad_sparse_tensor_linear(dy, dy32, policy: SparsityPolicy
+                               ) -> SparseTensor:
+    """The incoming gradient's ``SparseTensor`` for a GEMM layer's backward
+    pass — the dy bitmap comes from the PRODUCING dX GEMM's writeback
+    epilogue (registered against the exact cotangent object), never from a
+    rescan.  A registry miss (raw cotangent from the loss, a producer that
+    dropped emission, a rewrapped value) degrades to no mask: skipping is
+    lost for this dy, numerics are untouched."""
+    if not _needs_grad_bitmap(policy):
+        return SparseTensor(dy32, None, None)
+    hit = lookup_grad_bitmap(dy)
+    if hit is None:
+        return SparseTensor(dy32, None, None)
+    bitmap, (gr, gc) = hit
+    bm, bk, bn = policy.block
+    # The emitted granularity must serve BOTH backward masks this layer
+    # derives: a-operand (bm, bk) for dX and b-operand (bk, bn) for dW.
+    if bm % gr or bk % gr or bk % gc or bn % gc:
+        return SparseTensor(dy32, None, None)
+    return SparseTensor(dy32, bitmap, (gr, gc))
 
 
 # ---------------------------------------------------------------------------
@@ -159,24 +209,27 @@ def _act_matmul_bwd(policy: SparsityPolicy, act: str, res, dy):
     bm, bk, bn = policy.block
     dy32 = dy.astype(jnp.float32)
 
-    # The incoming gradient is scanned AT MOST ONCE; both backward GEMMs
-    # derive their operand masks from the same fine bitmap.
-    st_dy = SparseTensor(dy32, None, None)
-    if _needs_grad_bitmap(policy):
-        ggran = linear_grad_granularity(policy.block)
-        st_dy = SparseTensor(
-            dy32,
-            scan_bitmap(dy32, ggran, kind="grad", impl=policy.kernel_impl,
-                        interpret=policy.interpret),
-            ggran)
+    # The incoming gradient is NEVER rescanned: its bitmap was emitted by
+    # the producing dX GEMM's writeback epilogue (looked up by cotangent
+    # identity); both backward GEMMs derive their operand masks from it.
+    st_dy = _grad_sparse_tensor_linear(dy, dy32, policy)
 
     # --- dx_pre = (dy @ Wᵀ) ⊙ σ'(x_pre): OUTPUT (+INPUT) sparsity ---
     # out_mask = the forward ReLU bitmap, re-tiled: footprint(σ'(x_pre)) ==
     # footprint(relu(x_pre)) — the paper's §3.2 identity, zero recompute.
+    # This GEMM produces the NEXT layer's dy, so it emits that layer's
+    # bitmap in the same writeback that applies σ′.
     out_mask = st.mask_for((bm, bn)) if policy.use_output_sparsity else None
     dy_mask = st_dy.mask_for((bm, bk))
-    dx_pre = _mm(dy32, w.astype(jnp.float32).T, out_mask, dy_mask, None,
-                 policy, x_pre.dtype, epilogue=mult)
+    emit = linear_grad_granularity(policy.block) \
+        if _needs_grad_bitmap(policy) else None
+    res = _mm(dy32, w.astype(jnp.float32).T, out_mask, dy_mask, None,
+              policy, x_pre.dtype, epilogue=mult, emit_gran=emit)
+    if emit is not None:
+        dx_pre, dx_bits = res
+        register_grad_bitmap(dx_pre, dx_bits, emit)
+    else:
+        dx_pre = res
 
     # --- dW = xᵀ @ dy: INPUT sparsity on both operands (WG stage) ---
     # Xᵀ's mask is the SAME forward bitmap, block-transposed.
@@ -211,7 +264,10 @@ def matmul(x: jnp.ndarray, w: jnp.ndarray, policy: SparsityPolicy):
 def _matmul_fwd(x, w, policy: SparsityPolicy):
     bm, bk, bn = policy.block
     st = SparseTensor(x, None, None)
-    if policy.kernel_impl == "pallas" and (
+    # Raw (signed) inputs have no ReLU to fuse an encode into, so their
+    # bitmap costs a standalone scan — opt-in via scan_signed_inputs (the
+    # first layer's input is near-dense, so the scan rarely pays off).
+    if policy.scan_signed_inputs and policy.kernel_impl == "pallas" and (
             policy.use_input_sparsity_fp or policy.use_input_sparsity_bp):
         gran = linear_act_granularity(policy.block)
         st = SparseTensor(
@@ -231,16 +287,19 @@ def _matmul_bwd(policy: SparsityPolicy, res, dy):
     x = st.data
     bm, bk, bn = policy.block
     dy32 = dy.astype(jnp.float32)
-    st_dy = SparseTensor(dy32, None, None)
-    if _needs_grad_bitmap(policy):
-        ggran = linear_grad_granularity(policy.block)
-        st_dy = SparseTensor(
-            dy32,
-            scan_bitmap(dy32, ggran, kind="grad", impl=policy.kernel_impl,
-                        interpret=policy.interpret),
-            ggran)
-    dx = _mm(dy32, w.astype(jnp.float32).T, None, st_dy.mask_for((bm, bk)),
-             None, policy, x.dtype)
+    # dy's bitmap comes from the producing GEMM's emit epilogue (the layer
+    # above registered it); this layer's dX GEMM emits in turn.
+    st_dy = _grad_sparse_tensor_linear(dy, dy32, policy)
+    emit = linear_grad_granularity(policy.block) \
+        if _needs_grad_bitmap(policy) else None
+    res_dx = _mm(dy32, w.astype(jnp.float32).T, None,
+                 st_dy.mask_for((bm, bk)), None, policy, x.dtype,
+                 emit_gran=emit)
+    if emit is not None:
+        dx, dx_bits = res_dx
+        register_grad_bitmap(dx, dx_bits, emit)
+    else:
+        dx = res_dx
     xt = x.astype(jnp.float32).T
     xt_mask = st.t_mask_for((bm, bk)) if _needs_grad_bitmap(policy) else None
     dw = _mm(xt, dy32, None, xt_mask, st_dy.mask_for((bk, bn)), policy,

@@ -158,6 +158,49 @@ def conv_channel_granularity(channels: int,
 
 
 # ---------------------------------------------------------------------------
+# Backward-pass bitmap hand-off — producer GEMM → consumer layer
+# ---------------------------------------------------------------------------
+
+# The dX GEMM of layer L+1 emits the bitmap of its output (the dy of layer
+# L) in its writeback epilogue; layer L's backward fn then needs to find
+# that bitmap when JAX hands it the cotangent.  Cotangents flow through
+# JAX's autodiff machinery, not through user pytrees, so the hand-off is a
+# small trace-local registry keyed by OBJECT IDENTITY of the cotangent
+# array: the producer registers the exact array object it returns, and the
+# consumer looks up the exact object it receives.  Within one trace the
+# object is passed through unchanged, so identity holds; across traces (or
+# if JAX ever rewraps the value) the lookup just misses and the consumer
+# proceeds with no dy mask — skipping degrades, numerics don't.
+#
+# A bounded ring (not a dict) so stale entries from completed traces are
+# overwritten instead of accumulating; matching is by ``is``, so a stale
+# entry can never alias a live cotangent.
+_GRAD_BITMAP_RING_SIZE = 8
+_GRAD_BITMAPS: list = []
+
+
+def register_grad_bitmap(obj, bitmap: Optional[jnp.ndarray],
+                         gran: Tuple[int, int]) -> None:
+    """Record ``bitmap`` (granularity ``gran``) as describing the 2-D view
+    of cotangent ``obj``.  No-op when ``bitmap`` is None."""
+    if bitmap is None:
+        return
+    _GRAD_BITMAPS.append((obj, bitmap, gran))
+    if len(_GRAD_BITMAPS) > _GRAD_BITMAP_RING_SIZE:
+        del _GRAD_BITMAPS[0]
+
+
+def lookup_grad_bitmap(obj):
+    """The ``(bitmap, gran)`` a producer registered for this exact
+    cotangent object, or None.  Most-recent-first: backward order is
+    loss → input, so the producer's entry is the freshest."""
+    for entry, bitmap, gran in reversed(_GRAD_BITMAPS):
+        if entry is obj:
+            return bitmap, gran
+    return None
+
+
+# ---------------------------------------------------------------------------
 # Bitmap computation — the ONLY functions that scan tensor-sized data.
 # ---------------------------------------------------------------------------
 

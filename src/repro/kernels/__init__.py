@@ -10,8 +10,6 @@ from .ops import (  # noqa: F401
     GemmSpec,
     bitmap_scan,
     build_queue,
-    grouped_masked_matmul,
-    masked_matmul,
     relu_bwd_masked,
     relu_encode,
     sparse_gemm,

@@ -1,14 +1,15 @@
-"""Pallas block-any-nonzero bitmap scan — the encoder for SIGNED data.
+"""Pallas block-any-nonzero bitmap scan — the OFF-hot-path encoder.
 
-``kernels.relu_encode`` makes the activation bitmap a free byproduct of the
-forward ReLU, but two tensor classes have no ReLU to fuse into: raw inputs
-(plain ``conv``/``matmul`` at input-layer or post-pool boundaries) and
-incoming gradients (the BP dy scan).  The seed routed those through the
-``kernels.ref`` XLA oracle even on the pallas path; this kernel is the
-TPU-native replacement — one pass over the data, emitting the fine
-(gr, gc) bitmap directly (partial progress on the ROADMAP "TPU-native
-scan_bitmap" item: the scan is now a Pallas kernel; fusing it into the
-*producing* op's epilogue is the remaining step).
+Every training-step tensor now gets its bitmap from its PRODUCER:
+``kernels.relu_encode`` makes the activation bitmap a free byproduct of
+the forward ReLU, and the ``bitmap_emit`` GEMM epilogue stage
+(``kernels.masked_matmul``, staged via ``GemmSpec.epilogue``) thresholds
+each dy accumulator tile at writeback — so the ROADMAP "TPU-native
+scan_bitmap" item's endgame landed and ``scan_pallas:*`` is identically
+zero on the training hot path.  This standalone kernel survives for the
+two jobs with no producing op to fuse into: the OPT-IN entry scan of raw
+signed model inputs (``SparsityPolicy.scan_signed_inputs``) and the
+numerical reference that emit-epilogue tests compare against.
 
 Same granularity/launch-slab decoupling as relu_encode: one grid step
 covers an (lr, lc) slab and reduces it with a single reshape-max, so the

@@ -184,13 +184,59 @@ def masked_matmul_kernel(
 
 
 # ---------------------------------------------------------------------------
+# Composable epilogue stages — ONE application point per kernel family
+# ---------------------------------------------------------------------------
+
+def _apply_epilogue(acc, mult_tile, o_dtype, emit_gran):
+    """The single epilogue application point, shared by both grouped kernel
+    families.  Stages compose in canonical order:
+
+      1. ``sigma_prime`` — Hadamard with the (already-gathered) multiplier
+         tile (``mult_tile`` is None when the stage is off);
+      2. ``bitmap_emit`` — reduce the POST-σ′ tile to its (er, ec)
+         any-nonzero bitmap (``emit_gran`` is None when the stage is off),
+         so the emitted bits describe exactly the values written back.
+
+    ``acc`` may be (bm, bn) (predicated family) or (1, bm, bn) (compact
+    family); the returned bits are always the 2-D (bm//er, bn//ec) tile.
+    """
+    out = acc if mult_tile is None else acc * mult_tile
+    bits = None
+    if emit_gran is not None:
+        er, ec = emit_gran
+        v = out if out.ndim == 2 else out[0]
+        r, c = v.shape
+        vb = jnp.abs(v).reshape(r // er, er, c // ec, ec)
+        bits = (jnp.max(vb, axis=(1, 3)) > 0).astype(jnp.int32)
+    return out.astype(o_dtype), bits
+
+
+def _epilogue_refs(refs, has_mult, emit_gran):
+    """Decode the trailing ref list ``[mult?] o [bits?] acc`` of a variant
+    kernel: optional multiplier first, output(s) in the middle, the f32
+    accumulator scratch always last."""
+    mult_ref = refs[0] if has_mult else None
+    o_ref = refs[1] if has_mult else refs[0]
+    bits_ref = refs[-2] if emit_gran is not None else None
+    return mult_ref, o_ref, bits_ref, refs[-1]
+
+
+# ---------------------------------------------------------------------------
 # Grouped predicated kernel — one launch covers all G independent GEMMs of a
 # grouped/depthwise conv (grid gains a leading group dimension; masks carry a
 # leading G axis).  Semantics per group are identical to the 2-D kernel.
 # ---------------------------------------------------------------------------
 
-def _gmm_kernel(out_m_ref, a_m_ref, b_m_ref, a_ref, b_ref, o_ref, acc_ref):
-    """Grid = (G, Mb, Nb, Kb); K innermost so ``acc_ref`` accumulates."""
+def _gmm_kernel(out_m_ref, a_m_ref, b_m_ref, a_ref, b_ref, *refs,
+                has_mult: bool = False,
+                emit_gran: Optional[Tuple[int, int]] = None):
+    """Grid = (G, Mb, Nb, Kb); K innermost so ``acc_ref`` accumulates.
+
+    One body serves every epilogue combination — the trailing refs are
+    ``[mult?] o [bits?] acc`` per ``_epilogue_refs`` and the writeback goes
+    through ``_apply_epilogue`` (the only place stages are applied)."""
+    mult_ref, o_ref, bits_ref, acc_ref = \
+        _epilogue_refs(refs, has_mult, emit_gran)
     g = pl.program_id(0)
     i = pl.program_id(1)
     j = pl.program_id(2)
@@ -215,37 +261,28 @@ def _gmm_kernel(out_m_ref, a_m_ref, b_m_ref, a_ref, b_ref, o_ref, acc_ref):
 
     @pl.when(k == nk - 1)
     def _write():
-        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+        out, bits = _apply_epilogue(
+            acc_ref[...], None if mult_ref is None else mult_ref[0],
+            o_ref.dtype, emit_gran)
+        o_ref[0] = out
+        if bits_ref is not None:
+            bits_ref[0] = bits
 
 
-def _gmm_epilogue_kernel(out_m_ref, a_m_ref, b_m_ref, a_ref, b_ref, mult_ref,
-                         o_ref, acc_ref):
-    """Grouped predicated kernel + fused σ′-Hadamard epilogue."""
-    g = pl.program_id(0)
-    i = pl.program_id(1)
-    j = pl.program_id(2)
-    k = pl.program_id(3)
-    nk = pl.num_programs(3)
+def gmm_kernel_variant(has_mult: bool,
+                       emit_gran: Optional[Tuple[int, int]] = None):
+    """The predicated family's variant selector: binds the epilogue
+    configuration onto ``_gmm_kernel`` (a named closure so the sanitizer's
+    ``__module__``/``__name__`` resolution keeps working)."""
+    if not has_mult and emit_gran is None:
+        return _gmm_kernel
 
-    @pl.when(k == 0)
-    def _zero_acc():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+    def kernel(out_m_ref, a_m_ref, b_m_ref, a_ref, b_ref, *refs):
+        _gmm_kernel(out_m_ref, a_m_ref, b_m_ref, a_ref, b_ref, *refs,
+                    has_mult=has_mult, emit_gran=emit_gran)
 
-    active = (
-        (out_m_ref[g, i, j] != 0)
-        & (a_m_ref[g, i, k] != 0)
-        & (b_m_ref[g, k, j] != 0)
-    )
-
-    @pl.when(active)
-    def _issue_mxu():
-        acc_ref[...] += jnp.dot(
-            a_ref[0], b_ref[0], preferred_element_type=jnp.float32
-        )
-
-    @pl.when(k == nk - 1)
-    def _write():
-        o_ref[0] = (acc_ref[...] * mult_ref[0]).astype(o_ref.dtype)
+    kernel.__name__ = f"_gmm_kernel[mult={int(has_mult)},emit={emit_gran}]"
+    return kernel
 
 
 def grouped_masked_matmul_kernel(
@@ -260,9 +297,15 @@ def grouped_masked_matmul_kernel(
     bn: int,
     out_dtype=jnp.float32,
     epilogue_mult: Optional[jnp.ndarray] = None,   # (G, M, N) f32
+    emit_gran: Optional[Tuple[int, int]] = None,
     interpret: bool = False,
-) -> jnp.ndarray:
-    """Raw grouped predicated launch: G independent masked GEMMs, one grid."""
+):
+    """Raw grouped predicated launch: G independent masked GEMMs, one grid.
+
+    With ``emit_gran=(er, ec)`` the launch grows a second output — the
+    packed (G, M//er, N//ec) int32 any-nonzero bitmap of the written
+    values, emitted at accumulator writeback — and returns ``(out, bits)``.
+    """
     g, m, k = a.shape
     g2, k2, n = b.shape
     assert g == g2 and k == k2, (a.shape, b.shape)
@@ -277,33 +320,45 @@ def grouped_masked_matmul_kernel(
         pl.BlockSpec((1, bk, bn), lambda gi, i, j, k, *_: (gi, k, j)),
     ]
     operands = [a, b]
-    kernel = _gmm_kernel
     if epilogue_mult is not None:
         assert epilogue_mult.shape == (g, m, n), epilogue_mult.shape
         in_specs.append(
             pl.BlockSpec((1, bm, bn), lambda gi, i, j, k, *_: (gi, i, j)))
         operands.append(epilogue_mult.astype(jnp.float32))
-        kernel = _gmm_epilogue_kernel
+    kernel = gmm_kernel_variant(epilogue_mult is not None, emit_gran)
+
+    out_specs = pl.BlockSpec((1, bm, bn), lambda gi, i, j, k, *_: (gi, i, j))
+    out_shape = jax.ShapeDtypeStruct((g, m, n), out_dtype)
+    if emit_gran is not None:
+        er, ec = emit_gran
+        assert bm % er == 0 and bn % ec == 0, (emit_gran, bm, bn)
+        out_specs = [out_specs, pl.BlockSpec(
+            (1, bm // er, bn // ec), lambda gi, i, j, k, *_: (gi, i, j))]
+        out_shape = [out_shape,
+                     jax.ShapeDtypeStruct((g, m // er, n // ec), jnp.int32)]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(g, ni, nj, nk),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, bm, bn), lambda gi, i, j, k, *_: (gi, i, j)),
+        out_specs=out_specs,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
     )
     fn = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((g, m, n), out_dtype),
+        out_shape=out_shape,
         interpret=interpret,
     )
-    return fn(
+    res = fn(
         out_mask.astype(jnp.int32),
         a_mask.astype(jnp.int32),
         b_mask.astype(jnp.int32),
         *operands,
     )
+    if emit_gran is not None:
+        return res[0], res[1]
+    return res
 
 
 # ---------------------------------------------------------------------------
@@ -315,9 +370,18 @@ def grouped_masked_matmul_kernel(
 
 def _gmm_compact_kernel(
     gg_ref, ii_ref, jj_ref, n_act_ref, a_m_ref, b_m_ref, a_ref, b_ref,
-    o_ref, acc_ref
+    *refs, has_mult: bool = False,
+    emit_gran: Optional[Tuple[int, int]] = None
 ):
-    """Grid = (S, Kb).  Step s processes active tile (gg[s], ii[s], jj[s])."""
+    """Grid = (S, Kb).  Step s processes active tile (gg[s], ii[s], jj[s]).
+
+    One body serves every epilogue combination — the trailing refs are
+    ``[mult?] o [bits?] acc`` per ``_epilogue_refs`` and the writeback goes
+    through ``_apply_epilogue``.  With emission on, each queue slot writes
+    its own (1, bm//er, bn//ec) bits tile; dead slots write zeros (their
+    accumulator never left zero), so the caller's scatter stays exact."""
+    mult_ref, o_ref, bits_ref, acc_ref = \
+        _epilogue_refs(refs, has_mult, emit_gran)
     s = pl.program_id(0)
     k = pl.program_id(1)
     nk = pl.num_programs(1)
@@ -340,36 +404,29 @@ def _gmm_compact_kernel(
 
     @pl.when(k == nk - 1)
     def _write():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        out, bits = _apply_epilogue(
+            acc_ref[...], None if mult_ref is None else mult_ref[0],
+            o_ref.dtype, emit_gran)
+        o_ref[...] = out
+        if bits_ref is not None:
+            bits_ref[...] = bits[None]
 
 
-def _gmm_compact_epilogue_kernel(
-    gg_ref, ii_ref, jj_ref, n_act_ref, a_m_ref, b_m_ref, a_ref, b_ref,
-    mult_ref, o_ref, acc_ref
-):
-    s = pl.program_id(0)
-    k = pl.program_id(1)
-    nk = pl.num_programs(1)
+def gmm_compact_kernel_variant(has_mult: bool,
+                               emit_gran: Optional[Tuple[int, int]] = None):
+    """The compact family's variant selector (see ``gmm_kernel_variant``)."""
+    if not has_mult and emit_gran is None:
+        return _gmm_compact_kernel
 
-    @pl.when(k == 0)
-    def _zero_acc():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+    def kernel(gg_ref, ii_ref, jj_ref, n_act_ref, a_m_ref, b_m_ref,
+               a_ref, b_ref, *refs):
+        _gmm_compact_kernel(gg_ref, ii_ref, jj_ref, n_act_ref, a_m_ref,
+                            b_m_ref, a_ref, b_ref, *refs,
+                            has_mult=has_mult, emit_gran=emit_gran)
 
-    g = gg_ref[s]
-    i = ii_ref[s]
-    j = jj_ref[s]
-    live = s < n_act_ref[0]
-    active = live & (a_m_ref[g, i, k] != 0) & (b_m_ref[g, k, j] != 0)
-
-    @pl.when(active)
-    def _issue_mxu():
-        acc_ref[...] += jnp.dot(
-            a_ref[0], b_ref[0], preferred_element_type=jnp.float32
-        )
-
-    @pl.when(k == nk - 1)
-    def _write():
-        o_ref[...] = (acc_ref[...] * mult_ref[0]).astype(o_ref.dtype)
+    kernel.__name__ = \
+        f"_gmm_compact_kernel[mult={int(has_mult)},emit={emit_gran}]"
+    return kernel
 
 
 def grouped_compact_masked_matmul_kernel(
@@ -387,9 +444,15 @@ def grouped_compact_masked_matmul_kernel(
     bn: int,
     out_dtype=jnp.float32,
     epilogue_mult: Optional[jnp.ndarray] = None,
+    emit_gran: Optional[Tuple[int, int]] = None,
     interpret: bool = False,
-) -> jnp.ndarray:
-    """Returns the COMPACTED output (S, bm, bn); caller scatters to (G, M, N)."""
+):
+    """Returns the COMPACTED output (S, bm, bn); caller scatters to (G, M, N).
+
+    With ``emit_gran=(er, ec)`` also returns the compacted
+    (S, bm//er, bn//ec) int32 bits per queue slot — scattered back by the
+    caller with the same steered coordinates as the output tiles.
+    """
     g, m, k = a.shape
     g2, k2, n = b.shape
     assert g == g2 and k == k2
@@ -402,28 +465,37 @@ def grouped_compact_masked_matmul_kernel(
         pl.BlockSpec((1, bk, bn), lambda s, k, gg, ii, jj, *_: (gg[s], k, jj[s])),
     ]
     operands = [a, b]
-    kernel = _gmm_compact_kernel
     if epilogue_mult is not None:
         assert epilogue_mult.shape == (g, m, n), epilogue_mult.shape
         in_specs.append(pl.BlockSpec(
             (1, bm, bn), lambda s, k, gg, ii, jj, *_: (gg[s], ii[s], jj[s])))
         operands.append(epilogue_mult.astype(jnp.float32))
-        kernel = _gmm_compact_epilogue_kernel
+    kernel = gmm_compact_kernel_variant(epilogue_mult is not None, emit_gran)
+
+    out_specs = pl.BlockSpec((1, bm, bn), lambda s, k, *_: (s, 0, 0))
+    out_shape = jax.ShapeDtypeStruct((s_cap, bm, bn), out_dtype)
+    if emit_gran is not None:
+        er, ec = emit_gran
+        assert bm % er == 0 and bn % ec == 0, (emit_gran, bm, bn)
+        out_specs = [out_specs, pl.BlockSpec(
+            (1, bm // er, bn // ec), lambda s, k, *_: (s, 0, 0))]
+        out_shape = [out_shape, jax.ShapeDtypeStruct(
+            (s_cap, bm // er, bn // ec), jnp.int32)]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=6,
         grid=(s_cap, nk),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, bm, bn), lambda s, k, *_: (s, 0, 0)),
+        out_specs=out_specs,
         scratch_shapes=[pltpu.VMEM((1, bm, bn), jnp.float32)],
     )
     fn = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((s_cap, bm, bn), out_dtype),
+        out_shape=out_shape,
         interpret=interpret,
     )
-    return fn(
+    res = fn(
         gg.astype(jnp.int32),
         ii.astype(jnp.int32),
         jj.astype(jnp.int32),
@@ -432,6 +504,9 @@ def grouped_compact_masked_matmul_kernel(
         b_mask.astype(jnp.int32),
         *operands,
     )
+    if emit_gran is not None:
+        return res[0], res[1]
+    return res
 
 
 # ---------------------------------------------------------------------------

@@ -3,10 +3,11 @@
 THE masked-GEMM entry point is ``sparse_gemm(a, b, masks, spec)``:
 
   * ``GemmSpec`` is a frozen, hashable request object — tile shape, group
-    count, schedule ∈ {predicated, compact, dense}, epilogue ∈ {none,
-    sigma_prime}, queue builder, queue capacity, output dtype.  It is
-    static metadata: shardable, cacheable, and printable, where the old
-    API threaded seven loose kwargs through every layer.
+    count, schedule ∈ {predicated, compact, dense}, a composable tuple of
+    epilogue stages ⊆ {sigma_prime, bitmap_emit}, queue builder, queue
+    capacity, output dtype.  It is static metadata: shardable, cacheable,
+    and printable, where the old API threaded seven loose kwargs through
+    every layer.
   * ``GemmMasks`` carries the (out, a, b) block bitmaps; ``None`` on any
     slot means dense on that axis pair.
   * The dispatcher owns the pad / queue / overflow-fallback / scatter
@@ -26,15 +27,18 @@ Handles:
   * a ``schedule="dense"`` lowering (dense compute + output masking) that
     is numerically identical to the kernels — the xla_ref policy path.
 
-``masked_matmul`` / ``grouped_masked_matmul`` remain as thin deprecation
-shims over ``sparse_gemm`` (warn once; see docs/gemm_api.md).  Every
-dispatch is counted by ``kernels.stats`` under ``gemm:<schedule>:<g>``.
+With the ``bitmap_emit`` epilogue stage, a dispatch also returns the
+packed any-nonzero bitmap of its own output — emitted at accumulator
+writeback, so backward-pass metadata (the dy bitmap) is a free byproduct
+of the GEMM that produced the dy, exactly as ``relu_encode`` makes the
+activation bitmap a byproduct of the forward ReLU.  Every dispatch is
+counted by ``kernels.stats`` under ``gemm:<schedule>:<g>`` (plus
+``emit:grad`` per emitted bitmap).
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
-import warnings
 from typing import Any, List, NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
@@ -56,7 +60,27 @@ from .shapes import (
 DEFAULT_BLOCK = (128, 128, 128)
 
 SCHEDULES = ("predicated", "compact", "dense")
-EPILOGUES = ("none", "sigma_prime")
+# Composable epilogue stages, in canonical application order: the σ′
+# Hadamard first, then bitmap emission over the POST-σ′ values (the
+# emitted bits must describe exactly what is written back).
+EPILOGUE_STAGES = ("sigma_prime", "bitmap_emit")
+
+
+def normalize_epilogue(epilogue) -> Tuple[str, ...]:
+    """Canonicalize an epilogue declaration to a stage tuple.
+
+    Accepts the legacy strings (``"none"``/``"sigma_prime"``), ``None``,
+    or any iterable of stage names; returns the stages in canonical order
+    with duplicates rejected."""
+    if epilogue is None or epilogue == "none" or epilogue == ():
+        return ()
+    stages = (epilogue,) if isinstance(epilogue, str) else tuple(epilogue)
+    bad = [s for s in stages if s not in EPILOGUE_STAGES]
+    if bad or len(set(stages)) != len(stages):
+        raise ValueError(
+            f"epilogue stages must be unique and drawn from "
+            f"{EPILOGUE_STAGES}, got {epilogue!r}")
+    return tuple(s for s in EPILOGUE_STAGES if s in stages)
 
 
 def _use_interpret(interpret: Optional[bool]) -> bool:
@@ -110,11 +134,21 @@ class GemmSpec:
         epilogue, numerically identical (the xla_ref policy path; operand
         masks are accounted by the cost model, not consumed).
 
-    epilogue ∈ {"none", "sigma_prime"}: whether the call fuses an (M, N)
-    Hadamard multiplier into the accumulator writeback (the backward σ′
-    multiply).  The multiplier itself is DATA and is passed to
-    ``sparse_gemm(..., epilogue_mult=)``; the spec only declares the shape
-    of the launch, so it stays hashable/static.
+    epilogue: a tuple of composable stages (normalized from the legacy
+    strings ``"none"``/``"sigma_prime"``), applied at accumulator
+    writeback in canonical order:
+      * ``"sigma_prime"`` — Hadamard with an (M, N) multiplier (the
+        backward σ′ multiply).  The multiplier itself is DATA and is
+        passed to ``sparse_gemm(..., epilogue_mult=)``; the spec only
+        declares the shape of the launch, so it stays hashable/static.
+      * ``"bitmap_emit"`` — reduce the written (post-σ′) values to their
+        (``emit_gran``) any-nonzero bitmap in the same writeback, so the
+        producing GEMM hands its consumer the mask for free (no separate
+        ``bitmap_scan`` pass).  ``sparse_gemm`` then returns
+        ``(out, bitmap)``.
+
+    emit_gran: the (er, ec) bitmap granularity, required iff
+    ``"bitmap_emit"`` is staged; must divide the (bm, bn) tile edges.
 
     max_active_blocks: compact-queue capacity (None → all tiles, which
     provably cannot overflow).  interpret: None → auto (CPU ⇒ True).
@@ -129,7 +163,8 @@ class GemmSpec:
     block: Tuple[int, int, int] = DEFAULT_BLOCK
     groups: int = 1
     schedule: str = "predicated"
-    epilogue: str = "none"
+    epilogue: Tuple[str, ...] = ()
+    emit_gran: Optional[Tuple[int, int]] = None
     queue_builder: str = "prefix_sum"
     max_active_blocks: Optional[int] = None
     out_dtype: Any = jnp.float32
@@ -140,16 +175,37 @@ class GemmSpec:
         if self.schedule not in SCHEDULES:
             raise ValueError(
                 f"schedule must be one of {SCHEDULES}, got {self.schedule!r}")
-        if self.epilogue not in EPILOGUES:
-            raise ValueError(
-                f"epilogue must be one of {EPILOGUES}, got {self.epilogue!r}")
+        object.__setattr__(self, "epilogue",
+                           normalize_epilogue(self.epilogue))
         if self.groups < 1:
             raise ValueError(f"groups must be >= 1, got {self.groups}")
         if len(self.block) != 3 or any(e < 1 for e in self.block):
             raise ValueError(f"block must be 3 positive edges: {self.block}")
+        if self.emits_bitmap:
+            bm, _, bn = self.block
+            if (self.emit_gran is None or len(self.emit_gran) != 2
+                    or bm % self.emit_gran[0] or bn % self.emit_gran[1]):
+                raise ValueError(
+                    f"bitmap_emit epilogue requires emit_gran dividing "
+                    f"(bm, bn)={bm, bn}, got {self.emit_gran!r}")
+        elif self.emit_gran is not None:
+            raise ValueError(
+                f"emit_gran={self.emit_gran!r} without a bitmap_emit "
+                f"epilogue stage")
 
     def with_(self, **kw) -> "GemmSpec":
         return dataclasses.replace(self, **kw)
+
+    @property
+    def fuses_mult(self) -> bool:
+        """Whether the ``sigma_prime`` Hadamard stage is declared."""
+        return "sigma_prime" in self.epilogue
+
+    @property
+    def emits_bitmap(self) -> bool:
+        """Whether the ``bitmap_emit`` stage is declared (dispatch then
+        returns ``(out, bitmap)``)."""
+        return "bitmap_emit" in self.epilogue
 
     @property
     def stats_key(self) -> str:
@@ -227,7 +283,7 @@ def sparse_gemm(
     spec: Optional[GemmSpec] = None,
     *,
     epilogue_mult: Optional[jnp.ndarray] = None,
-) -> jnp.ndarray:
+):
     """Block-sparse GEMM with output/input sparsity skipping — the single
     entry point for every masked GEMM in the system.
 
@@ -238,12 +294,19 @@ def sparse_gemm(
     mix (the group-boundary contract).
 
     Result equals the dense product masked by ``expand(masks.out)`` (and
-    Hadamard-multiplied by ``epilogue_mult`` when ``spec.epilogue ==
-    "sigma_prime"``) exactly — skipping is lossless by construction.
+    Hadamard-multiplied by ``epilogue_mult`` when the spec stages
+    ``sigma_prime``) exactly — skipping is lossless by construction.
+
+    With the ``bitmap_emit`` stage, returns ``(out, bitmap)`` where
+    ``bitmap`` is the packed (⌈M/er⌉, ⌈N/ec⌉) int32 any-nonzero bitmap of
+    the returned (post-epilogue) values at ``spec.emit_gran`` — emitted at
+    accumulator writeback, identical to a fresh ``bitmap_scan`` of the
+    output, and counted as ``emit:grad`` (a bitmap computation, not a
+    rescan).
     """
     spec = GemmSpec() if spec is None else spec
     masks = _as_masks(masks)
-    if (epilogue_mult is not None) != (spec.epilogue == "sigma_prime"):
+    if (epilogue_mult is not None) != spec.fuses_mult:
         raise ValueError(
             f"spec.epilogue={spec.epilogue!r} but epilogue_mult "
             f"{'is' if epilogue_mult is not None else 'is not'} provided")
@@ -262,12 +325,20 @@ def sparse_gemm(
                 f"{spec.groups}")
         a3, b3, mult3 = a, b, epilogue_mult
     stats.record(spec.stats_key)
+    if spec.emits_bitmap:
+        # The emitted bitmap is a gradient-side bitmap COMPUTATION (it
+        # replaces the standalone scan_pallas:grad pass), so it counts
+        # toward the one-computation-per-tensor-per-step budget.
+        stats.record("emit:grad")
     if _GEMM_EVENTS is not None:
         _GEMM_EVENTS.append(spec)
     _observe_live_tiles(spec, a3, b3, masks)
     with stats.lifecycle_scope("gemm", f"{spec.schedule}:{spec.groups}"):
-        out = _dispatch(a3, b3, masks, spec, mult3)
-    return out[0] if not grouped_in else out
+        res = _dispatch(a3, b3, masks, spec, mult3)
+    if spec.emits_bitmap:
+        out, bits = res
+        return (out[0], bits[0]) if not grouped_in else (out, bits)
+    return res[0] if not grouped_in else res
 
 
 def _observe_live_tiles(spec: GemmSpec, a3, b3, masks: GemmMasks) -> None:
@@ -298,12 +369,18 @@ def _observe_live_tiles(spec: GemmSpec, a3, b3, masks: GemmMasks) -> None:
 
 
 def _dispatch(a, b, masks: GemmMasks, spec: GemmSpec, mult):
-    """Pad → (queue →) launch → (scatter →) unpad.  Exists exactly once."""
+    """Pad → (queue →) launch → (scatter →) unpad.  Exists exactly once.
+
+    Returns ``out`` (G, M, N) — or ``(out, bits)`` with the emitted
+    (G, ⌈M/er⌉, ⌈N/ec⌉) bitmap when the spec stages ``bitmap_emit``.
+    Every branch (dense, predicated, compact, overflow fallback) produces
+    the same pytree structure, so the runtime ``lax.cond`` composes."""
     g, m, k = a.shape
     g2, k2, n = b.shape
     assert g == g2 == spec.groups and k == k2, (a.shape, b.shape, spec)
     bm, bk, bn = spec.block
     out_dtype = spec.out_dtype
+    emit = spec.emit_gran if spec.emits_bitmap else None
     if mult is not None:
         assert mult.shape == (g, m, n), (mult.shape, (g, m, n))
 
@@ -319,7 +396,14 @@ def _dispatch(a, b, masks: GemmMasks, spec: GemmSpec, mult):
             out = out * em[:, :m, :n]
         if mult is not None:
             out = out * mult.astype(jnp.float32)
-        return out.astype(out_dtype)
+        if emit is None:
+            return out.astype(out_dtype)
+        er, ec = emit
+        me, ne = ceil_to(m, er), ceil_to(n, ec)
+        ob = jnp.abs(pad3(out, me, ne))
+        bits = (jnp.max(ob.reshape(g, me // er, er, ne // ec, ec),
+                        axis=(2, 4)) > 0).astype(jnp.int32)
+        return out.astype(out_dtype), bits
 
     ni, nk, nj = grid_shape((m, k, n), spec.block)
     mp, kp, np_ = ni * bm, nk * bk, nj * bn
@@ -335,7 +419,7 @@ def _dispatch(a, b, masks: GemmMasks, spec: GemmSpec, mult):
         return grouped_masked_matmul_kernel(
             a_p, b_p, om, am, bmask,
             bm=bm, bk=bk, bn=bn, out_dtype=out_dtype,
-            epilogue_mult=mult_p, interpret=itp,
+            epilogue_mult=mult_p, emit_gran=emit, interpret=itp,
         )
 
     if spec.schedule == "compact":
@@ -357,19 +441,33 @@ def _dispatch(a, b, masks: GemmMasks, spec: GemmSpec, mult):
             compacted = grouped_compact_masked_matmul_kernel(
                 a_p, b_p, gg, ii, jj, n_active, am, bmask,
                 bm=bm, bk=bk, bn=bn, out_dtype=out_dtype,
-                epilogue_mult=mult_p, interpret=itp,
+                epilogue_mult=mult_p, emit_gran=emit, interpret=itp,
             )
+            if emit is not None:
+                compacted, bits_c = compacted
             # Scatter the queue back to dense tile layout.  Padding steps
             # carry zero tiles at coords of dead queue slots — we direct
             # dead slots at (0, 0, 0) via scatter-ADD so they are no-ops.
-            live = (jnp.arange(s_cap) < n_active[0]).astype(out_dtype)
+            live_slot = jnp.arange(s_cap) < n_active[0]
+            live = live_slot.astype(out_dtype)
             masked = compacted * live[:, None, None]
-            sg = jnp.where(jnp.arange(s_cap) < n_active[0], gg, 0)
-            si = jnp.where(jnp.arange(s_cap) < n_active[0], ii, 0)
-            sj = jnp.where(jnp.arange(s_cap) < n_active[0], jj, 0)
+            sg = jnp.where(live_slot, gg, 0)
+            si = jnp.where(live_slot, ii, 0)
+            sj = jnp.where(live_slot, jj, 0)
             out_tiles = jnp.zeros((g, ni, nj, bm, bn), out_dtype)
             out_tiles = out_tiles.at[sg, si, sj].add(masked)
-            return out_tiles.transpose(0, 1, 3, 2, 4).reshape(g, mp, np_)
+            out_d = out_tiles.transpose(0, 1, 3, 2, 4).reshape(g, mp, np_)
+            if emit is None:
+                return out_d
+            # Emitted bits ride the same steered scatter as their tiles
+            # (dead slots carry zero bits: their accumulator never left 0).
+            er, ec = emit
+            bits_m = bits_c * live_slot.astype(jnp.int32)[:, None, None]
+            bt = jnp.zeros((g, ni, nj, bm // er, bn // ec), jnp.int32)
+            bt = bt.at[sg, si, sj].add(bits_m)
+            bits = bt.transpose(0, 1, 3, 2, 4).reshape(
+                g, mp // er, np_ // ec)
+            return out_d, bits
 
         if s_cap >= g * ni * nj:
             out = _compact()          # queue provably cannot overflow
@@ -377,86 +475,19 @@ def _dispatch(a, b, masks: GemmMasks, spec: GemmSpec, mult):
             # Queue-capacity overflow would silently drop live tiles.  The
             # live count is a traced value, so detect at runtime and fall
             # back to the predicated (full-grid) schedule — exact always.
+            # Both branches return the same (out[, bits]) pytree.
             out = jax.lax.cond(n_live > s_cap, _predicated, _compact)
     else:
         out = _predicated()
-    return out[:, :m, :n]
-
-
-# ---------------------------------------------------------------------------
-# Deprecation shims — the pre-redesign orchestrators, kwarg-for-kwarg
-# ---------------------------------------------------------------------------
-
-_DEPRECATION_WARNED: set = set()
-
-
-def _warn_deprecated(name: str) -> None:
-    if name in _DEPRECATION_WARNED:
-        return
-    _DEPRECATION_WARNED.add(name)
-    warnings.warn(
-        f"kernels.ops.{name} is deprecated; build a GemmSpec and call "
-        f"sparse_gemm(a, b, masks, spec) instead (see docs/gemm_api.md)",
-        DeprecationWarning, stacklevel=3)
-
-
-def masked_matmul(
-    a: jnp.ndarray,
-    b: jnp.ndarray,
-    out_mask: Optional[jnp.ndarray] = None,
-    a_mask: Optional[jnp.ndarray] = None,
-    b_mask: Optional[jnp.ndarray] = None,
-    *,
-    block: Tuple[int, int, int] = DEFAULT_BLOCK,
-    out_dtype=jnp.float32,
-    compact: bool = False,
-    max_active_blocks: Optional[int] = None,
-    queue_builder: str = "prefix_sum",
-    epilogue_mult: Optional[jnp.ndarray] = None,
-    interpret: Optional[bool] = None,
-) -> jnp.ndarray:
-    """DEPRECATED: 2-D masked GEMM — now the G=1 lowering of ``sparse_gemm``.
-
-    Kept (warn-once) so external callers and ``kernels/ref.py`` comparisons
-    keep working; new code builds a ``GemmSpec``.
-    """
-    _warn_deprecated("masked_matmul")
-    spec = GemmSpec(
-        block=block, groups=1,
-        schedule="compact" if compact else "predicated",
-        epilogue="none" if epilogue_mult is None else "sigma_prime",
-        queue_builder=queue_builder, max_active_blocks=max_active_blocks,
-        out_dtype=out_dtype, interpret=interpret)
-    return sparse_gemm(a, b, GemmMasks(out_mask, a_mask, b_mask), spec,
-                       epilogue_mult=epilogue_mult)
-
-
-def grouped_masked_matmul(
-    a: jnp.ndarray,
-    b: jnp.ndarray,
-    out_mask: Optional[jnp.ndarray] = None,
-    a_mask: Optional[jnp.ndarray] = None,
-    b_mask: Optional[jnp.ndarray] = None,
-    *,
-    block: Tuple[int, int, int] = DEFAULT_BLOCK,
-    out_dtype=jnp.float32,
-    compact: bool = False,
-    max_active_blocks: Optional[int] = None,
-    queue_builder: str = "prefix_sum",
-    epilogue_mult: Optional[jnp.ndarray] = None,
-    interpret: Optional[bool] = None,
-) -> jnp.ndarray:
-    """DEPRECATED: grouped masked GEMM — now spelled ``sparse_gemm`` with a
-    ``GemmSpec(groups=G)``.  Kept as a warn-once shim."""
-    _warn_deprecated("grouped_masked_matmul")
-    spec = GemmSpec(
-        block=block, groups=a.shape[0],
-        schedule="compact" if compact else "predicated",
-        epilogue="none" if epilogue_mult is None else "sigma_prime",
-        queue_builder=queue_builder, max_active_blocks=max_active_blocks,
-        out_dtype=out_dtype, interpret=interpret)
-    return sparse_gemm(a, b, GemmMasks(out_mask, a_mask, b_mask), spec,
-                       epilogue_mult=epilogue_mult)
+    if emit is None:
+        return out[:, :m, :n]
+    er, ec = emit
+    out, bits = out
+    # Padding tiles are dead (zero accumulators), so the padded bitmap
+    # rows/cols are exactly 0 — unpadding to the data's covering grid is
+    # exact, matching what a fresh scan of the unpadded output would give.
+    return out[:, :m, :n], bits[:, :ceil_to(m, er) // er,
+                                :ceil_to(n, ec) // ec]
 
 
 # ---------------------------------------------------------------------------

@@ -297,9 +297,11 @@ def test_lint_shim_call_and_ref_exemption():
     ok = lint.lint_source("want = ref.masked_matmul(a, b, m)\n",
                           path="tests/x.py")
     assert ok == []
+    # No kernels/ allowance anymore: the shims are deleted, so a bare call
+    # breaks at runtime anywhere — including inside kernels/.
     in_kernels = lint.lint_source("out = masked_matmul(a, b, m)\n",
                                   path="src/repro/kernels/ops.py")
-    assert in_kernels == []
+    assert codes(in_kernels) == ["SHIM_CALL"]
 
 
 def test_lint_conv_fallback_and_waiver():

@@ -6,8 +6,11 @@ Four contract families:
      reference kernels in kernels/masked_matmul.py) across
      {predicated, compact} × {none, sigma_prime epilogue} × queue capacity
      {unbounded, exactly-live, overflow→fallback}.
-  2. the deprecation shims (`masked_matmul`/`grouped_masked_matmul`) warn
-     once and forward exactly.
+  2. EPILOGUE COMPOSITION — the ``(sigma_prime, bitmap_emit)`` stage tuple
+     emits, at accumulator writeback, a bitmap bit-identical to a fresh
+     ``bitmap_scan`` of the returned (post-σ′) output, across
+     {predicated, compact} × {G=1, grouped} × overflow-fallback; and the
+     autotune cache key ignores epilogue/emit_gran (tuples included).
   3. policy→spec resolution (`SparsityPolicy.gemm_spec`) lands the right
      schedule/queue/tiles, incl. grouped_gemm_block degenerate tiles, and
      the default policy still builds queues sort-free
@@ -15,8 +18,6 @@ Four contract families:
   4. the dispatcher's normalized ``gemm:<schedule>:<g>`` stats keys and
      ``GemmSpec.launch_geometry``'s pad/grid/queue arithmetic.
 """
-import warnings
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -144,37 +145,90 @@ def test_g1_bounded_queue_and_overflow_bit_exact(epilogue, cap_kind):
 
 
 # ---------------------------------------------------------------------------
-# 2. deprecation shims
+# 2. composable epilogue stages — bitmap_emit at accumulator writeback
 # ---------------------------------------------------------------------------
 
-def test_shims_warn_once_and_forward_exactly():
-    a, b, mask = _operands(24, 16, 24, key=11)
-    om = ref.block_any_nonzero(mask, 8, 8)
-    ops._DEPRECATION_WARNED.clear()
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        r1 = ops.masked_matmul(a, b, out_mask=om, block=(8, 8, 8),
-                               compact=True)
-        r2 = ops.masked_matmul(a, b, out_mask=om, block=(8, 8, 8))
-    deps = [x for x in w if issubclass(x.category, DeprecationWarning)]
-    assert len(deps) == 1 and "sparse_gemm" in str(deps[0].message)
-    want = ops.sparse_gemm(a, b, GemmMasks(out=om),
-                           GemmSpec(block=(8, 8, 8), schedule="compact"))
-    np.testing.assert_array_equal(np.asarray(r1), np.asarray(want))
-    np.testing.assert_allclose(r1, r2, rtol=1e-6, atol=1e-6)
+def _scan_after_gemm_reference(out, emit_gran):
+    """The separate-pass producer this PR retires: a fresh ``bitmap_scan``
+    of the (already returned) GEMM output.  The emitted bitmap must equal
+    it bit-for-bit."""
+    return ops.bitmap_scan(out, block=emit_gran, kind="ref")
 
-    g = 3
+
+@pytest.mark.parametrize("schedule", ["predicated", "compact", "dense"])
+@pytest.mark.parametrize("stages", [("bitmap_emit",),
+                                    ("sigma_prime", "bitmap_emit")])
+def test_emit_epilogue_matches_scan_after_gemm_g1(schedule, stages):
+    """ACCEPTANCE: the emitted bitmap == scan-of-output, and the output
+    itself is unchanged by staging emission — on every schedule, with and
+    without the σ′ stage composed in (bits describe POST-σ′ values)."""
+    m, k, n = 40, 24, 48
+    a, b, mask = _operands(m, k, n, key=23)
+    om = ref.block_any_nonzero(
+        jnp.pad(mask, ((0, -m % 8), (0, -n % 16))), 8, 16)
+    mult = mask if "sigma_prime" in stages else None
+    base = GemmSpec(block=(8, 8, 16), schedule=schedule,
+                    epilogue="sigma_prime" if mult is not None else "none",
+                    interpret=True)
+    plain = ops.sparse_gemm(a, b, GemmMasks(out=om), base,
+                            epilogue_mult=mult)
+    spec = base.with_(epilogue=stages, emit_gran=(4, 4))
+    out, bits = ops.sparse_gemm(a, b, GemmMasks(out=om), spec,
+                                epilogue_mult=mult)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(plain))
+    want = _scan_after_gemm_reference(out, (4, 4))
+    np.testing.assert_array_equal(np.asarray(bits), np.asarray(want))
+
+
+@pytest.mark.parametrize("cap_kind", ["unbounded", "exact", "overflow"])
+def test_emit_epilogue_grouped_and_overflow_fallback(cap_kind):
+    """Grouped emission across queue capacities: the runtime predicated
+    fallback must return the same (out, bits) pytree as the queue path."""
+    g, m, k, n = 3, 24, 16, 24
+    a, b, mask = _operands(m, k, n, key=29)
     ag = jnp.stack([a, a * 2, a * 3])
     bg = jnp.stack([b, b, b])
-    omg = jnp.stack([om, om, om])
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        rg = ops.grouped_masked_matmul(ag, bg, omg, block=(8, 8, 8))
-    deps = [x for x in w if issubclass(x.category, DeprecationWarning)]
-    assert len(deps) == 1                      # its own warn-once key
-    wg = ops.sparse_gemm(ag, bg, GemmMasks(out=omg),
-                         GemmSpec(block=(8, 8, 8), groups=g))
-    np.testing.assert_array_equal(np.asarray(rg), np.asarray(wg))
+    omg = jnp.stack([ref.block_any_nonzero(mask, 8, 8)] * g)
+    multg = jnp.stack([mask, mask, mask])
+    n_live = int(np.asarray(omg).sum())
+    cap = {"unbounded": None, "exact": n_live,
+           "overflow": n_live - 1}[cap_kind]
+    spec = GemmSpec(block=(8, 8, 8), groups=g, schedule="compact",
+                    epilogue=("sigma_prime", "bitmap_emit"),
+                    emit_gran=(8, 8), max_active_blocks=cap, interpret=True)
+    out, bits = ops.sparse_gemm(ag, bg, GemmMasks(out=omg), spec,
+                                epilogue_mult=multg)
+    want_out = ops.sparse_gemm(
+        ag, bg, GemmMasks(out=omg),
+        spec.with_(epilogue="sigma_prime", emit_gran=None,
+                   max_active_blocks=None),
+        epilogue_mult=multg)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want_out))
+    for gi in range(g):
+        want_bits = _scan_after_gemm_reference(out[gi], (8, 8))
+        np.testing.assert_array_equal(np.asarray(bits[gi]),
+                                      np.asarray(want_bits))
+
+
+def test_autotune_key_excludes_epilogue_tuple_and_emit_gran():
+    """The autotuner must share measurements across epilogue variants: the
+    cache key is (block, groups, queue_builder, padded) — staging
+    sigma_prime/bitmap_emit (and the emit_gran it requires) or changing
+    out_dtype must NOT fork the key."""
+    from repro.kernels import autotune
+
+    dims = (64, 32, 64)
+    base = GemmSpec(block=(8, 8, 8), schedule="compact")
+    variants = [
+        base,
+        base.with_(epilogue=("sigma_prime",)),
+        base.with_(epilogue=("bitmap_emit",), emit_gran=(4, 8)),
+        base.with_(epilogue=("sigma_prime", "bitmap_emit"),
+                   emit_gran=(8, 8)),
+        base.with_(schedule="predicated", out_dtype=jnp.bfloat16),
+    ]
+    keys = {autotune.key_for(s, dims) for s in variants}
+    assert len(keys) == 1, keys
 
 
 # ---------------------------------------------------------------------------
@@ -196,8 +250,9 @@ def test_policy_gemm_spec_resolution():
         s = p.gemm_spec(groups=g, dims=(4096, 9, 1), grans=(1, 1, 1))
         assert s.block == pol.grouped_gemm_block(p, (4096, 9, 1), (1, 1, 1))
         assert s.block == (8, 9, 1)
-    # fused-epilogue declaration
-    assert p.gemm_spec(fused_epilogue=True).epilogue == "sigma_prime"
+    # fused-epilogue declaration (normalized to the canonical stage tuple)
+    assert p.gemm_spec(fused_epilogue=True).epilogue == ("sigma_prime",)
+    assert p.gemm_spec(fused_epilogue=False).epilogue == ()
 
 
 def test_default_policy_training_step_is_sort_free_and_spec_routed():
@@ -226,6 +281,22 @@ def test_gemm_spec_validates():
         GemmSpec(schedule="eager")
     with pytest.raises(ValueError, match="epilogue"):
         GemmSpec(epilogue="relu")
+    with pytest.raises(ValueError, match="epilogue"):
+        GemmSpec(epilogue=("sigma_prime", "sigma_prime"))   # duplicate stage
+    with pytest.raises(ValueError, match="emit_gran"):
+        GemmSpec(epilogue=("bitmap_emit",))                 # gran required
+    with pytest.raises(ValueError, match="emit_gran"):
+        GemmSpec(epilogue=("bitmap_emit",), emit_gran=(3, 8))  # 3 ∤ bm=128
+    with pytest.raises(ValueError, match="emit_gran"):
+        GemmSpec(emit_gran=(8, 8))                          # gran w/o stage
+    # legacy spellings still normalize
+    assert GemmSpec(epilogue="none").epilogue == ()
+    assert GemmSpec(epilogue=None).epilogue == ()
+    assert GemmSpec(epilogue="sigma_prime").epilogue == ("sigma_prime",)
+    # canonical order is enforced regardless of declaration order
+    s = GemmSpec(epilogue=("bitmap_emit", "sigma_prime"), emit_gran=(8, 8))
+    assert s.epilogue == ("sigma_prime", "bitmap_emit")
+    assert s.fuses_mult and s.emits_bitmap
     with pytest.raises(ValueError, match="groups"):
         GemmSpec(groups=0)
     a = jnp.ones((8, 8), jnp.float32)

@@ -96,6 +96,55 @@ def test_schema_mutations_are_drift(mutate, frag):
     assert errs and any(frag in e for e in errs), (frag, errs)
 
 
+# ---------------------------------------------------------------------------
+# BENCH_8.json: fused emit beats GEMM-then-scan, committed and gated
+# ---------------------------------------------------------------------------
+
+def _bench8_doc():
+    path = os.path.join(REPO_ROOT, "BENCH_8.json")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_committed_bench8_passes_schema_and_claim():
+    from benchmarks.wallclock import (
+        EMIT_SCHEDULES, EMIT_VARIANTS, check_emit_schema,
+    )
+    doc = _bench8_doc()
+    assert doc["geometry"] == "full"     # committed artifact carries claim
+    assert check_emit_schema(doc) == []
+    # acceptance, asserted directly: per (workload, schedule) the fused
+    # σ′+emit launch is strictly faster than GEMM-then-bitmap_scan, for
+    # both pallas schedules on a CNN and an FFN backward-dX workload
+    cells = {}
+    for r in doc["rows"]:
+        cells[(r["workload"], r["schedule"], r["variant"])] = r["us_median"]
+    fams = {w.split(":", 1)[0] for w, _, _ in cells}
+    assert fams == {"cnn", "ffn"}, fams
+    for (w, s, v) in list(cells):
+        assert s in EMIT_SCHEDULES and v in EMIT_VARIANTS
+        if v == "fused":
+            assert cells[(w, s, "fused")] < cells[(w, s, "gemm_scan")], (w, s)
+
+
+@pytest.mark.parametrize("mutate,frag", [
+    (lambda d: d.pop("rows"), "missing top-level"),
+    (lambda d: d["rows"][0].pop("emit_gran"), "key drift"),
+    (lambda d: d["rows"][0].update(extra=1), "key drift"),
+    (lambda d: d["rows"].__setitem__(
+        slice(None), [r for r in d["rows"] if r["variant"] != "gemm_scan"]),
+     "missing cells"),
+    (lambda d: next(r for r in d["rows"] if r["variant"] == "fused")
+        .update(us_median=10 ** 9), "not faster"),
+])
+def test_bench8_mutations_are_drift(mutate, frag):
+    from benchmarks.wallclock import check_emit_schema
+    doc = _bench8_doc()
+    mutate(doc)
+    errs = check_emit_schema(doc)
+    assert errs and any(frag in e for e in errs), (frag, errs)
+
+
 def test_cnn_gemm_dims_come_from_the_model():
     from benchmarks.wallclock import cnn_gemm_dims
     name, (m, k, n) = cnn_gemm_dims(image_size=8, width=0.125, batch=2)
