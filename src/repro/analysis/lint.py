@@ -48,6 +48,8 @@ SPEC_CALLEES = {"SparsityPolicy", "GemmSpec", "with_", "replace",
                 "gemm_spec", "dataclasses.replace"}
 KNOWN_KEY_HEADS = {"encode", "scan", "scan_pallas", "emit", "queue", "gemm",
                    "conv",
+                   # runtime guard layer (docs/resilience.md):
+                   "guard", "registry", "fallback",
                    # legacy heads normalized by stats._KEY_ALIASES:
                    "mm", "gmm", "grouped_mm"}
 FALLBACK_KEY = "conv:dense_fallback"

@@ -1,2 +1,3 @@
-from .checkpoint import (latest_step, restore, save,  # noqa: F401
-                         restore_resharded)
+from .checkpoint import (CheckpointCorruptError, CheckpointError,  # noqa: F401
+                         latest_step, load_state, restore,
+                         restore_resharded, save, set_crash_hook)

@@ -1,16 +1,35 @@
-"""Fault-tolerant checkpointing: atomic writes, keep-last-k, auto-resume,
-elastic mesh-reshape on restore.
+"""Crash-safe checkpointing: fsync'd atomic commits, keep-last-k,
+auto-resume with corrupt-newest fallback, elastic mesh-reshape on restore.
 
 Layout:  <dir>/step_00001230/            (atomic: written as .tmp, renamed)
              leaves.npz                  (flat leaf arrays, path-keyed)
              treedef.json                (leaf paths + metadata)
+             state.json                  (optional host-side extras:
+                                          autotune cache + guard state)
 
 Arrays are saved as *full logical values* (host-gathered), so a restore
 may target a different mesh/device-count than the writer — the launcher
 simply device_puts with the new sharding (``restore_resharded``).  That is
 the elastic-restart path: kill a 512-chip job, restart on 256 chips, keep
-training.  Partially-written checkpoints are never visible (rename is the
-commit point) and are garbage-collected on the next save.
+training.
+
+Commit protocol (docs/resilience.md):
+
+  1. payload files are written into ``step_X.tmp`` and fsync'd,
+  2. the tmp dir itself is fsync'd (entries durable before the rename),
+  3. ``os.rename(tmp, final)`` is the commit point; a previous ``final``
+     for the SAME step is moved aside FIRST and deleted only AFTER the
+     new rename lands — the previous intact checkpoint is never destroyed
+     while the new one is still uncommitted,
+  4. the parent dir is fsync'd, then older steps are pruned.
+
+Failures raise typed ``CheckpointError``s (never bare ``assert``s, which
+vanish under ``python -O``).  ``restore`` with no explicit step falls back
+to the previous intact checkpoint when the newest is corrupt or partial
+(counted as ``guard:ckpt_fallback``; the wreck is quarantined to
+``*.corrupt`` and cleared by the next ``_prune``).  Partially-written
+checkpoints are never visible (rename is the commit point) and are
+garbage-collected on the next save.
 """
 from __future__ import annotations
 
@@ -24,11 +43,74 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import stats
+
 _STEP_RE = re.compile(r"^step_(\d{8})$")
+# Suffixes of non-committed / quarantined dirs _prune clears.
+_WRECKAGE_SUFFIXES = (".tmp", ".old", ".corrupt")
+
+
+class CheckpointError(Exception):
+    """Typed checkpoint failure carrying step/leaf context.
+
+    ``step`` is the checkpoint step involved (None when unknown); ``leaf``
+    the offending leaf path/key for payload mismatches."""
+
+    def __init__(self, msg: str, *, step: Optional[int] = None,
+                 leaf: Optional[str] = None):
+        ctx = []
+        if step is not None:
+            ctx.append(f"step={step}")
+        if leaf is not None:
+            ctx.append(f"leaf={leaf}")
+        super().__init__(f"{msg}" + (f" [{', '.join(ctx)}]" if ctx else ""))
+        self.step = step
+        self.leaf = leaf
+
+
+class CheckpointCorruptError(CheckpointError):
+    """The stored payload is unreadable or inconsistent (truncated npz,
+    missing keys, leaf count/shape drift) — restore may fall back to an
+    older intact checkpoint."""
+
+
+# Fault-injection crash points (repro/runtime/faults.py): an installed hook
+# may raise at a named protocol point to simulate a writer dying there.
+# None (the default) is a zero-cost passthrough.
+_CRASH_HOOK = None
+
+
+def set_crash_hook(fn):
+    """Install (or, with None, remove) the crash-point hook; returns the
+    previous hook."""
+    global _CRASH_HOOK
+    prev, _CRASH_HOOK = _CRASH_HOOK, fn
+    return prev
+
+
+def _crash_point(name: str) -> None:
+    if _CRASH_HOOK is not None:
+        _CRASH_HOOK(name)
 
 
 def _step_dir(path: str, step: int) -> str:
     return os.path.join(path, f"step_{step:08d}")
+
+
+def _fsync_file(p: str) -> None:
+    fd = os.open(p, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(p: str) -> None:
+    fd = os.open(p, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 def _flatten(tree) -> Tuple[dict, list]:
@@ -42,8 +124,12 @@ def _flatten(tree) -> Tuple[dict, list]:
     return flat, paths
 
 
-def save(path: str, step: int, tree: Any, *, keep: int = 3) -> str:
-    """Atomic checkpoint write; prunes to the newest ``keep`` checkpoints."""
+def save(path: str, step: int, tree: Any, *, keep: int = 3,
+         extra: Optional[dict] = None) -> str:
+    """Durable atomic checkpoint write; prunes to the newest ``keep``
+    checkpoints.  ``extra`` (JSON-able) is persisted as ``state.json`` —
+    the host-side resume payload (autotune cache, guard state) that keeps
+    a restart from cold-starting its schedules."""
     os.makedirs(path, exist_ok=True)
     final = _step_dir(path, step)
     tmp = final + ".tmp"
@@ -52,13 +138,33 @@ def save(path: str, step: int, tree: Any, *, keep: int = 3) -> str:
     os.makedirs(tmp)
     flat, paths = _flatten(tree)
     np.savez(os.path.join(tmp, "leaves.npz"), **flat)
+    _fsync_file(os.path.join(tmp, "leaves.npz"))
+    _crash_point("checkpoint:post_leaves")
     treedef = jax.tree_util.tree_structure(tree)
     with open(os.path.join(tmp, "treedef.json"), "w") as f:
         json.dump({"paths": paths, "n_leaves": len(paths),
                    "treedef": str(treedef), "step": step}, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if extra is not None:
+        with open(os.path.join(tmp, "state.json"), "w") as f:
+            json.dump(extra, f)
+            f.flush()
+            os.fsync(f.fileno())
+    _fsync_dir(tmp)
+    _crash_point("checkpoint:pre_commit")
     if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)                       # commit point
+        # Same-step rewrite: the intact previous dir must survive until
+        # the new one is committed — move it aside, never rmtree first.
+        old = final + ".old"
+        if os.path.exists(old):
+            shutil.rmtree(old)
+        os.rename(final, old)
+        os.rename(tmp, final)                   # commit point
+        shutil.rmtree(old, ignore_errors=True)
+    else:
+        os.rename(tmp, final)                   # commit point
+    _fsync_dir(path)
     _prune(path, keep)
     return final
 
@@ -67,9 +173,10 @@ def _prune(path: str, keep: int) -> None:
     steps = _list_steps(path)
     for s in steps[:-keep] if keep > 0 else []:
         shutil.rmtree(_step_dir(path, s), ignore_errors=True)
-    # clean stragglers from crashed writers
+    # clean wreckage: crashed writers (.tmp), interrupted same-step
+    # rewrites (.old), quarantined corrupt restores (.corrupt)
     for name in os.listdir(path):
-        if name.endswith(".tmp"):
+        if name.endswith(_WRECKAGE_SUFFIXES):
             shutil.rmtree(os.path.join(path, name), ignore_errors=True)
 
 
@@ -89,24 +196,97 @@ def latest_step(path: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
-def restore(path: str, template: Any, step: Optional[int] = None
-            ) -> Tuple[int, Any]:
-    """Restore into the structure of ``template`` (shapes validated)."""
+def _load_step(path: str, step: int, template: Any) -> Any:
+    """Load one committed checkpoint into ``template``'s structure.
+
+    Raises ``CheckpointCorruptError`` for unreadable/inconsistent payloads
+    (the fallback-able class) — typed, with step/leaf context."""
+    d = _step_dir(path, step)
+    try:
+        with np.load(os.path.join(d, "leaves.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+    except Exception as e:
+        # np.load failures (truncated zip, bad magic, missing file) are
+        # exactly the corrupt-newest class — they must not propagate past
+        # the latest_step retry in restore().
+        raise CheckpointCorruptError(
+            f"unreadable leaves.npz under {d}: {e!r}", step=step) from e
+    t_leaves, tdef = jax.tree_util.tree_flatten(template)
+    if len(flat) != len(t_leaves):
+        raise CheckpointCorruptError(
+            f"leaf count mismatch: checkpoint has {len(flat)}, template "
+            f"wants {len(t_leaves)}", step=step)
+    out = []
+    for i, want in enumerate(t_leaves):
+        key = f"leaf_{i:05d}"
+        if key not in flat:
+            raise CheckpointCorruptError(
+                f"missing array {key!r} in leaves.npz", step=step, leaf=key)
+        got = flat[key]
+        if got.shape != tuple(want.shape):
+            raise CheckpointCorruptError(
+                f"shape mismatch: checkpoint {got.shape} vs template "
+                f"{tuple(want.shape)}", step=step, leaf=key)
+        out.append(jnp.asarray(got, dtype=want.dtype))
+    return jax.tree_util.tree_unflatten(tdef, out)
+
+
+def _quarantine(path: str, step: int) -> None:
+    """Move a corrupt committed step dir aside (``*.corrupt``) so the next
+    ``_list_steps`` no longer offers it and the next ``_prune`` clears it."""
+    d = _step_dir(path, step)
+    try:
+        target = d + ".corrupt"
+        if os.path.exists(target):
+            shutil.rmtree(target)
+        os.rename(d, target)
+    except OSError:
+        pass                         # best-effort: fallback still proceeds
+
+
+def restore(path: str, template: Any, step: Optional[int] = None,
+            *, fallback: bool = True) -> Tuple[int, Any]:
+    """Restore into the structure of ``template`` (shapes validated).
+
+    With ``step=None`` (auto-resume), a corrupt/partial newest checkpoint
+    does NOT kill the restore: it is quarantined, ``guard:ckpt_fallback``
+    is counted, and the previous intact checkpoint is loaded instead
+    (``fallback=False`` disables the retry).  An explicit ``step`` is
+    always loaded exactly, corrupt-or-not raising on failure."""
+    if step is not None:
+        return step, _load_step(path, step, template)
+    steps = _list_steps(path)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {path}")
+    last_err: Optional[CheckpointError] = None
+    for s in reversed(steps):
+        try:
+            return s, _load_step(path, s, template)
+        except CheckpointCorruptError as e:
+            if not fallback:
+                raise
+            stats.record("guard:ckpt_fallback")
+            _quarantine(path, s)
+            last_err = e
+    raise CheckpointError(
+        f"every checkpoint under {path} is corrupt "
+        f"(newest failure: {last_err})", step=steps[-1])
+
+
+def load_state(path: str, step: Optional[int] = None) -> Optional[dict]:
+    """The ``state.json`` extra payload of a checkpoint (newest by
+    default), or None when absent/unreadable — host-side resume state is
+    best-effort and must never block a params restore."""
     if step is None:
         step = latest_step(path)
         if step is None:
-            raise FileNotFoundError(f"no checkpoints under {path}")
-    d = _step_dir(path, step)
-    with np.load(os.path.join(d, "leaves.npz")) as z:
-        flat = {k: z[k] for k in z.files}
-    leaves = [flat[f"leaf_{i:05d}"] for i in range(len(flat))]
-    t_leaves, tdef = jax.tree_util.tree_flatten(template)
-    assert len(leaves) == len(t_leaves), (len(leaves), len(t_leaves))
-    out = []
-    for got, want in zip(leaves, t_leaves):
-        assert got.shape == tuple(want.shape), (got.shape, want.shape)
-        out.append(jnp.asarray(got, dtype=want.dtype))
-    return step, jax.tree_util.tree_unflatten(tdef, out)
+            return None
+    p = os.path.join(_step_dir(path, step), "state.json")
+    try:
+        with open(p) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
 
 
 def restore_resharded(path: str, template: Any, shardings: Any,

@@ -125,6 +125,13 @@ class SparsityPolicy:
         from measured live-tile stats of recent dispatches.  The resolved
         spec keeps ``origin="policy"``: autotuning is still this one
         sanctioned resolution point, just measurement-driven.
+
+        Quarantine (docs/resilience.md) applies on EVERY resolution path,
+        autotuned or not: a key the guard layer demoted down the
+        degradation ladder (compact → predicated → dense — persistent
+        queue overflow, bitmap-consistency trips) is clamped to its
+        allowed schedule here, so a misbehaving spec cannot re-enter the
+        compact path by being resolved statically.
         """
         block = grouped_gemm_block(self, dims, grans) \
             if dims is not None else self.block
@@ -146,7 +153,10 @@ class SparsityPolicy:
             origin="policy",
         )
         if self.autotune:
+            # resolve() applies the quarantine clamp inside the cache.
             spec = _autotune.resolve(spec, dims=dims, grans=grans)
+        else:
+            spec = _autotune.apply_quarantine(spec, dims=dims)
         return spec
 
 

@@ -178,12 +178,30 @@ def conv_channel_granularity(channels: int,
 _GRAD_BITMAP_RING_SIZE = 8
 _GRAD_BITMAPS: list = []
 
+# Fault-injection tap (repro/runtime/faults.py): an installed hook may veto
+# a registration (the "registry drop" fault class) so the chaos harness can
+# prove a missed hand-off is detected (``registry:miss`` counter) and
+# survived (a miss degrades to no mask, never to wrong numerics).
+_REGISTER_HOOK = None
+
+
+def set_register_hook(fn):
+    """Install (or, with None, remove) the registry fault hook; returns the
+    previous hook.  The hook receives ``(obj, bitmap, gran)`` and returns
+    False to drop the registration."""
+    global _REGISTER_HOOK
+    prev, _REGISTER_HOOK = _REGISTER_HOOK, fn
+    return prev
+
 
 def register_grad_bitmap(obj, bitmap: Optional[jnp.ndarray],
                          gran: Tuple[int, int]) -> None:
     """Record ``bitmap`` (granularity ``gran``) as describing the 2-D view
     of cotangent ``obj``.  No-op when ``bitmap`` is None."""
     if bitmap is None:
+        return
+    if _REGISTER_HOOK is not None \
+            and _REGISTER_HOOK(obj, bitmap, gran) is False:
         return
     _GRAD_BITMAPS.append((obj, bitmap, gran))
     if len(_GRAD_BITMAPS) > _GRAD_BITMAP_RING_SIZE:
@@ -193,10 +211,17 @@ def register_grad_bitmap(obj, bitmap: Optional[jnp.ndarray],
 def lookup_grad_bitmap(obj):
     """The ``(bitmap, gran)`` a producer registered for this exact
     cotangent object, or None.  Most-recent-first: backward order is
-    loss → input, so the producer's entry is the freshest."""
+    loss → input, so the producer's entry is the freshest.
+
+    Hits and misses are counted (``registry:hit`` / ``registry:miss``) so
+    the runtime guard can tell routine misses (the loss cotangent has no
+    producer) from a drop storm — the fault class where emitted bitmaps
+    stop reaching their consumers."""
     for entry, bitmap, gran in reversed(_GRAD_BITMAPS):
         if entry is obj:
+            stats.record("registry:hit")
             return bitmap, gran
+    stats.record("registry:miss")
     return None
 
 

@@ -127,7 +127,25 @@ class Decision:
     operand_frac: Optional[float]
     samples: int                    # measured samples behind the decision
     event: str                      # "default" | "measured" | "retune"
+                                    # | "demote:<reason>"
     seq: int
+
+
+# The degradation ladder (docs/resilience.md): "compact" is the most
+# machinery-heavy schedule (queue construction every dispatch), "dense" the
+# safest.  A quarantined key is clamped to at most the ladder rung its
+# demotion level allows — a spec that persistently overflows its queue or
+# trips the guard's consistency probes stops paying for the compact path.
+DEGRADE_LADDER = ("compact", "predicated", "dense")
+
+
+def clamp_schedule(schedule: str, level: int) -> str:
+    """The schedule actually allowed for a key at demotion ``level``:
+    level 0 = anything, 1 = no compact, 2 = dense only."""
+    if level <= 0 or schedule not in DEGRADE_LADDER:
+        return schedule
+    idx = DEGRADE_LADDER.index(schedule)
+    return DEGRADE_LADDER[max(idx, min(level, len(DEGRADE_LADDER) - 1))]
 
 
 def _refined_block(block: Tuple[int, int, int],
@@ -150,18 +168,26 @@ class AutotuneCache:
                  drift_threshold: float = 0.15,
                  compact_max_live: float = 0.5,
                  dense_min_live: float = 0.98,
-                 refine_block_live: float = 0.75):
+                 refine_block_live: float = 0.75,
+                 overflow_demote_after: int = 8):
         self.window = window
         self.min_samples = min_samples
         self.drift_threshold = drift_threshold
         self.compact_max_live = compact_max_live
         self.dense_min_live = dense_min_live
         self.refine_block_live = refine_block_live
+        self.overflow_demote_after = overflow_demote_after
         self.hits = 0
         self.misses = 0
         self.retunes = 0
+        self.demotions = 0
         self.log: List[dict] = []
         self._decisions: Dict[AutotuneKey, Decision] = {}
+        # key → demotion level on DEGRADE_LADDER (0 = unquarantined) and
+        # key → {reason: count} suspicion tallies feeding the guard's
+        # degrade verdict (runtime/guards.py).
+        self._quarantine: Dict[AutotuneKey, int] = {}
+        self._suspects: Dict[AutotuneKey, Dict[str, int]] = {}
         # dispatch signature of a resolved spec → the key that resolved it,
         # so the dispatcher's observation lands in the same buffer the NEXT
         # resolve reads even when the tuned block differs from the key's
@@ -189,16 +215,89 @@ class AutotuneCache:
             stats.record_live_tiles(shapeless.stats_key, out_frac,
                                     operand_frac)
 
+    def _attributed_key(self, spec: "GemmSpec",
+                        dims: Optional[Tuple[int, int, int]]) -> AutotuneKey:
+        """The key that resolved ``spec`` (via the dispatch-signature
+        reverse map), falling back to a fresh key for specs this cache
+        never saw."""
+        return self._spec_keys.get(self._dispatch_sig(spec, dims)) \
+            or self._spec_keys.get(self._dispatch_sig(spec, None)) \
+            or key_for(spec, dims)
+
     def observe_dispatch(self, spec: "GemmSpec",
                          dims: Tuple[int, int, int], out_frac: float,
                          operand_frac: float = 1.0) -> None:
         """Dispatcher-side entry: attribute a concrete ``sparse_gemm``'s
-        measured fractions to the key that resolved ``spec`` (falling back
-        to a fresh key for specs this cache never saw)."""
-        key = self._spec_keys.get(self._dispatch_sig(spec, dims)) \
-            or self._spec_keys.get(self._dispatch_sig(spec, None)) \
-            or key_for(spec, dims)
-        self.observe(key, out_frac, operand_frac)
+        measured fractions to the key that resolved ``spec``."""
+        self.observe(self._attributed_key(spec, dims), out_frac,
+                     operand_frac)
+
+    # -- quarantine: the degradation ladder -----------------------------
+
+    def quarantine_level(self, key: AutotuneKey) -> int:
+        """Demotion level for ``key`` — the max of its shaped entry and
+        its shapeless twin (a demotion of the spec demotes every shape)."""
+        lvl = self._quarantine.get(key, 0)
+        if key.padded is not None:
+            twin = dataclasses.replace(key, padded=None)
+            lvl = max(lvl, self._quarantine.get(twin, 0))
+        return lvl
+
+    def report_suspect(self, spec: "GemmSpec",
+                       dims: Optional[Tuple[int, int, int]],
+                       reason: str) -> AutotuneKey:
+        """Tally one piece of evidence against the key that resolved
+        ``spec`` (overflow fallback, bitmap-consistency mismatch, kernel-
+        sanitizer trip).  The guard's *degrade* verdict demotes the accrued
+        suspects; overflow additionally auto-demotes past its threshold."""
+        key = self._attributed_key(spec, dims)
+        tally = self._suspects.setdefault(key, {})
+        tally[reason] = tally.get(reason, 0) + 1
+        if reason == "overflow" \
+                and tally[reason] >= self.overflow_demote_after \
+                and self.quarantine_level(key) < 1:
+            self.demote(key, reason="overflow")
+        return key
+
+    def suspects(self) -> Dict[AutotuneKey, Dict[str, int]]:
+        return {k: dict(v) for k, v in self._suspects.items()}
+
+    def demote(self, key: AutotuneKey, *, reason: str) -> Optional[str]:
+        """Push ``key`` one rung down the degradation ladder.  Returns the
+        newly-allowed schedule, or None when already at the bottom.  The
+        demotion is a first-class decision-log event (``demote:<reason>``)
+        so the audit trail shows WHY a spec left the compact schedule."""
+        lvl = self._quarantine.get(key, 0)
+        if lvl >= len(DEGRADE_LADDER) - 1:
+            return None
+        lvl += 1
+        self._quarantine[key] = lvl
+        self.demotions += 1
+        stats.record("guard:demote")
+        allowed = DEGRADE_LADDER[lvl]
+        prev = self._decisions.get(key)
+        block = prev.block if prev is not None else key.block
+        if prev is not None:
+            # Re-clamp the cached decision so subsequent hits replay (and
+            # log) the demoted schedule, not the quarantined one.
+            prev.schedule = clamp_schedule(prev.schedule, lvl)
+        out_frac, op_frac, n = self.measured(key)
+        self._append_log(
+            Decision(key, allowed, tuple(block), out_frac, op_frac, n,
+                     f"demote:{reason}", next(self._seq)),
+            f"demote:{reason}")
+        return allowed
+
+    def demote_suspects(self, *, reason: str = "guard"
+                        ) -> List[AutotuneKey]:
+        """The degrade verdict's action: demote every key with accrued
+        suspicion one rung; clears the tallies it acted on."""
+        demoted = []
+        for key in list(self._suspects):
+            if self.demote(key, reason=reason) is not None:
+                demoted.append(key)
+            self._suspects.pop(key, None)
+        return demoted
 
     # -- resolution -----------------------------------------------------
 
@@ -237,10 +336,12 @@ class AutotuneCache:
 
     def _decide(self, key, default_spec, out_frac, op_frac, n, grans, dims,
                 *, event: str) -> Decision:
+        lvl = self.quarantine_level(key)
         if n < self.min_samples or out_frac is None:
             # Not enough measurement yet: the static policy resolution
             # stands, recorded as an explicit (traceable) default.
-            return Decision(key, default_spec.schedule,
+            return Decision(key,
+                            clamp_schedule(default_spec.schedule, lvl),
                             tuple(default_spec.block), out_frac, op_frac, n,
                             "default", next(self._seq))
         if out_frac <= self.compact_max_live:
@@ -250,6 +351,7 @@ class AutotuneCache:
             schedule = "dense"
         else:
             schedule = "predicated"
+        schedule = clamp_schedule(schedule, lvl)
         block = tuple(default_spec.block)
         if schedule != "dense" and dims is not None \
                 and out_frac >= self.refine_block_live:
@@ -260,8 +362,10 @@ class AutotuneCache:
     def _apply(self, decision: Decision, default_spec: "GemmSpec",
                key: AutotuneKey,
                dims: Optional[Tuple[int, int, int]]) -> "GemmSpec":
-        spec = default_spec.with_(schedule=decision.schedule,
-                                  block=decision.block)
+        # Defensive re-clamp: a demotion may postdate the cached decision.
+        schedule = clamp_schedule(decision.schedule,
+                                  self.quarantine_level(key))
+        spec = default_spec.with_(schedule=schedule, block=decision.block)
         self._spec_keys[self._dispatch_sig(spec, dims)] = key
         return spec
 
@@ -284,6 +388,75 @@ class AutotuneCache:
 
     def decisions(self) -> Dict[AutotuneKey, Decision]:
         return dict(self._decisions)
+
+    # -- persistence (checkpoint state.json) ----------------------------
+
+    def export_state(self, *, log_tail: int = 256) -> dict:
+        """JSON-able snapshot of the cache: decisions, quarantine levels,
+        suspect tallies, counters and the decision-log tail — what a
+        crash-safe resume needs so schedules don't cold-start
+        (checkpoint/checkpoint.py ``state.json``)."""
+        return {
+            "decisions": [
+                {"key": _key_doc(d.key), "schedule": d.schedule,
+                 "block": list(d.block), "live_frac": d.live_frac,
+                 "operand_frac": d.operand_frac, "samples": d.samples,
+                 "event": d.event, "seq": d.seq}
+                for d in self._decisions.values()],
+            "quarantine": [
+                {"key": _key_doc(k), "level": lvl}
+                for k, lvl in self._quarantine.items()],
+            "suspects": [
+                {"key": _key_doc(k), "tally": dict(t)}
+                for k, t in self._suspects.items()],
+            "counters": {"hits": self.hits, "misses": self.misses,
+                         "retunes": self.retunes,
+                         "demotions": self.demotions},
+            "log": self.log[-log_tail:],
+        }
+
+    def import_state(self, doc: dict) -> None:
+        """Rehydrate a snapshot produced by ``export_state`` — resumed
+        training re-enters with warm schedules and an intact quarantine."""
+        max_seq = -1
+        for d in doc.get("decisions", []):
+            key = _key_from_doc(d["key"])
+            dec = Decision(key, d["schedule"], tuple(d["block"]),
+                           d["live_frac"], d["operand_frac"], d["samples"],
+                           d["event"], d["seq"])
+            self._decisions[key] = dec
+            max_seq = max(max_seq, d["seq"])
+        for q in doc.get("quarantine", []):
+            key = _key_from_doc(q["key"])
+            self._quarantine[key] = max(self._quarantine.get(key, 0),
+                                        int(q["level"]))
+        for s in doc.get("suspects", []):
+            key = _key_from_doc(s["key"])
+            tally = self._suspects.setdefault(key, {})
+            for reason, n in s["tally"].items():
+                tally[reason] = tally.get(reason, 0) + int(n)
+        c = doc.get("counters", {})
+        self.hits += c.get("hits", 0)
+        self.misses += c.get("misses", 0)
+        self.retunes += c.get("retunes", 0)
+        self.demotions += c.get("demotions", 0)
+        for row in doc.get("log", []):
+            max_seq = max(max_seq, row.get("seq", -1))
+        self.log.extend(doc.get("log", []))
+        self._seq = itertools.count(max_seq + 1)
+
+
+def _key_doc(key: AutotuneKey) -> dict:
+    return {"block": list(key.block), "groups": key.groups,
+            "queue_builder": key.queue_builder,
+            "padded": None if key.padded is None else list(key.padded)}
+
+
+def _key_from_doc(d: dict) -> AutotuneKey:
+    return AutotuneKey(
+        block=tuple(d["block"]), groups=int(d["groups"]),
+        queue_builder=d["queue_builder"],
+        padded=None if d["padded"] is None else tuple(d["padded"]))
 
 
 # ---------------------------------------------------------------------------
@@ -318,6 +491,45 @@ def observe_dispatch(spec: "GemmSpec", dims: Tuple[int, int, int],
                      out_frac: float, operand_frac: float = 1.0) -> None:
     """Dispatcher hook (``kernels.ops.sparse_gemm``)."""
     _CACHE.observe_dispatch(spec, dims, out_frac, operand_frac)
+
+
+def report_overflow(spec: "GemmSpec",
+                    dims: Optional[Tuple[int, int, int]] = None) -> None:
+    """Dispatcher hook: one concrete compact dispatch overflowed its queue
+    and fell back to the predicated schedule.  Past
+    ``overflow_demote_after`` occurrences the key is auto-demoted off the
+    compact schedule (a persistently-overflowing spec must stop paying for
+    queue construction)."""
+    _CACHE.report_suspect(spec, dims, "overflow")
+
+
+def apply_quarantine(spec: "GemmSpec", *,
+                     dims: Optional[Tuple[int, int, int]] = None
+                     ) -> "GemmSpec":
+    """Clamp a statically-resolved spec to its key's quarantine level —
+    the non-autotune resolution path's view of the degradation ladder
+    (``SparsityPolicy.gemm_spec`` calls this when ``autotune=False`` so a
+    demoted spec stays demoted regardless of how it was resolved)."""
+    key = key_for(spec, dims)
+    lvl = _CACHE.quarantine_level(key)
+    clamped = clamp_schedule(spec.schedule, lvl)
+    if clamped != spec.schedule:
+        stats.record("guard:quarantine_clamp")
+        spec = spec.with_(schedule=clamped)
+        # Keep dispatch→key attribution intact for the clamped spec so
+        # subsequent observations and overflow reports land on this key.
+        _CACHE._spec_keys[_CACHE._dispatch_sig(spec, dims)] = key
+    return spec
+
+
+def export_state() -> dict:
+    """Snapshot of the global cache for checkpoint persistence."""
+    return _CACHE.export_state()
+
+
+def import_state(doc: dict) -> None:
+    """Rehydrate the global cache from a checkpoint ``state.json``."""
+    _CACHE.import_state(doc)
 
 
 def log_rows() -> List[dict]:

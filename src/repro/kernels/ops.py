@@ -262,6 +262,25 @@ def _as_masks(masks: MasksLike) -> GemmMasks:
 # threaded per process, so a plain module slot (not a contextvar) is enough.
 _GEMM_EVENTS: Optional[List[GemmSpec]] = None
 
+# Fault-injection tap (repro/runtime/faults.py): when a hook is installed,
+# every dispatch offers named values for tampering — the chaos harness uses
+# it to shrink a compact queue's capacity ("gemm:spec") or flip bits in an
+# emitted bitmap ("gemm:emit_bits") without the kernels layer importing the
+# runtime layer.  None (the default) is a zero-cost passthrough.
+_TAMPER_HOOK = None
+
+
+def set_tamper_hook(fn):
+    """Install (or, with None, remove) the fault-injection tamper hook;
+    returns the previous hook so callers can restore it."""
+    global _TAMPER_HOOK
+    prev, _TAMPER_HOOK = _TAMPER_HOOK, fn
+    return prev
+
+
+def _tamper(site: str, value):
+    return value if _TAMPER_HOOK is None else _TAMPER_HOOK(site, value)
+
 
 @contextlib.contextmanager
 def collect_gemm_events():
@@ -305,6 +324,7 @@ def sparse_gemm(
     rescan).
     """
     spec = GemmSpec() if spec is None else spec
+    spec = _tamper("gemm:spec", spec)
     masks = _as_masks(masks)
     if (epilogue_mult is not None) != spec.fuses_mult:
         raise ValueError(
@@ -337,6 +357,7 @@ def sparse_gemm(
         res = _dispatch(a3, b3, masks, spec, mult3)
     if spec.emits_bitmap:
         out, bits = res
+        bits = _tamper("gemm:emit_bits", bits)
         return (out[0], bits[0]) if not grouped_in else (out, bits)
     return res[0] if not grouped_in else res
 
@@ -476,6 +497,15 @@ def _dispatch(a, b, masks: GemmMasks, spec: GemmSpec, mult):
             # live count is a traced value, so detect at runtime and fall
             # back to the predicated (full-grid) schedule — exact always.
             # Both branches return the same (out[, bits]) pytree.
+            if not isinstance(n_live, jax.core.Tracer) \
+                    and int(n_live) > s_cap:
+                # Concrete dispatch overflowed: count the fallback and
+                # attribute it to the spec's autotune key so a persistently
+                # overflowing spec can be demoted off the compact schedule
+                # (kernels/autotune.py quarantine ladder).
+                stats.record("fallback:queue_overflow")
+                from . import autotune
+                autotune.report_overflow(spec, (m, k, n))
             out = jax.lax.cond(n_live > s_cap, _predicated, _compact)
     else:
         out = _predicated()

@@ -21,6 +21,24 @@ Key families (normalized):
                                                   {predicated, compact,
                                                   dense}; g = group count)
   conv:dense_fallback                             escaped-the-engine convs
+  fallback:queue_overflow                         compact dispatches whose
+                                                  live count exceeded the
+                                                  queue capacity (concrete
+                                                  dispatches only — traced
+                                                  ones can't be counted)
+  registry:hit / registry:miss                    grad-bitmap registry
+                                                  lookups (a miss means a
+                                                  consumer proceeds with no
+                                                  dy mask — lost skipping,
+                                                  never wrong numerics)
+  guard:<event>                                   runtime guard layer
+                                                  (docs/resilience.md):
+                                                  nonfinite_skip,
+                                                  bitmap_mismatch,
+                                                  registry_miss, demote,
+                                                  quarantine_clamp,
+                                                  ckpt_fallback,
+                                                  verdict:<v>
 
 Legacy key heads from the pre-redesign orchestrators ("mm", "gmm",
 "grouped_mm") are aliased onto the normalized ``gemm`` family at record
@@ -101,6 +119,28 @@ def gemm_launches(schedule: str = "", groups: Optional[int] = None) -> int:
             continue
         n += v
     return n
+
+
+def guard_counts() -> Dict[str, int]:
+    """The ``guard:*`` family — the runtime guard layer's detection and
+    verdict counters (docs/resilience.md)."""
+    return {k: v for k, v in _COUNTS.items() if k.startswith("guard:")}
+
+
+def record_at_runtime(kind: str, flag) -> None:
+    """Increment counter ``kind`` at EXECUTION time by the runtime value of
+    ``flag`` (a traced 0/1 scalar) — the escape hatch for events that only
+    exist at run time, like the optimizer's non-finite skip.  ``record``
+    counts at trace time (once per trace); this counts once per execution
+    in which ``flag`` is nonzero, via an async host callback (it does not
+    force a device sync on the value's consumers)."""
+    import jax as _jax
+
+    def _cb(v):
+        if float(v) != 0.0:
+            _COUNTS[_normalize(kind)] += 1
+
+    _jax.debug.callback(_cb, flag)
 
 
 @contextlib.contextmanager

@@ -12,7 +12,13 @@ Features exercised end-to-end by examples/train_lm.py:
   * straggler mitigation hook: per-step wall-times feed an outlier
     detector; on a real fleet the callback triggers re-balancing (here it
     logs — the decision logic is what we can test without a fleet),
-  * optional int8 error-feedback gradient compression (DP all-reduce).
+  * optional int8 error-feedback gradient compression (DP all-reduce),
+  * opt-in guarded execution (docs/resilience.md): pass a
+    ``runtime.guards.StepGuard`` and each step's health is folded into a
+    verdict — bounded skips, rollback-to-checkpoint with backoff,
+    schedule degradation.  Guarded runs sync the small metric scalars
+    every step; unguarded runs keep the deferred-loss contract (no
+    per-step device→host sync).
 """
 from __future__ import annotations
 
@@ -28,9 +34,12 @@ import numpy as np
 from repro import checkpoint as ckpt
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.data.pipeline import lm_batch
+from repro.kernels import autotune as _autotune
 from repro.launch.steps import make_train_step
 from repro.models.transformer import lm_init
 from repro.optim.optimizer import OptConfig, adamw_init
+from repro.runtime import faults as _faults
+from repro.runtime.guards import StepGuard
 from repro.sharding import partition, sharding_rules
 
 
@@ -71,6 +80,10 @@ class StragglerDetector:
         if slow:
             self.flags.append((step, dt, med))
         self.times.append(dt)
+        if len(self.times) > self.window:
+            # only the trailing window is ever read — an unbounded history
+            # is a slow leak on week-long runs
+            del self.times[:-self.window]
         return slow
 
 
@@ -88,13 +101,24 @@ def train_loop(
     log_every: int = 10,
     param_dtype=jnp.float32,
     on_metrics: Optional[Callable[[int, Dict[str, float]], None]] = None,
+    guard: Optional[StepGuard] = None,
+    loss_flush_steps: int = 4096,
 ) -> Dict[str, Any]:
-    """Returns {'params', 'opt_state', 'losses', 'straggler', 'resumed_from'}."""
+    """Returns {'params', 'opt_state', 'losses', 'straggler', 'resumed_from'}.
+
+    ``guard`` opts into guarded execution: each step's metrics feed
+    ``StepGuard.observe_step``; a *rollback*/*degrade* verdict restores the
+    newest intact checkpoint (degrade additionally demotes suspect specs
+    down the schedule ladder), and unhealthy steps never produce
+    checkpoints.  ``loss_flush_steps`` bounds the deferred-loss buffer:
+    device loss values materialize to host floats in chunks of that many
+    steps (one sync per chunk) instead of pinning every step's device
+    value until the loop ends."""
     opt_cfg = OptConfig(
         learning_rate=tcfg.learning_rate, warmup_steps=tcfg.warmup_steps,
         total_steps=tcfg.total_steps, weight_decay=tcfg.weight_decay,
         beta1=tcfg.beta1, beta2=tcfg.beta2, grad_clip=tcfg.grad_clip,
-        loss_scale=tcfg.loss_scale)
+        loss_scale=tcfg.loss_scale, emit_guard_stats=guard is not None)
     step_fn = make_train_step(cfg, opt_cfg, microbatches=tcfg.microbatches)
 
     params = lm_init(jax.random.key(tcfg.seed), cfg, dtype=param_dtype)
@@ -102,20 +126,41 @@ def train_loop(
     start_step = 0
     resumed_from = None
 
-    if ckpt_dir and resume and ckpt.latest_step(ckpt_dir) is not None:
+    def _shardings(params, opt_state):
+        return {
+            "params": partition.params_shardings(params, mesh, fsdp=fsdp),
+            "opt": partition.to_shardings(
+                partition.opt_state_pspecs(opt_state, params, mesh,
+                                           fsdp=fsdp), mesh),
+        }
+
+    def _restore_latest(params, opt_state):
+        """Newest intact checkpoint → (step, params, opt_state); the
+        shapes/dtypes of the current values are the template."""
         state_tpl = {"params": params, "opt": opt_state}
         if mesh is not None:
-            sh = {
-                "params": partition.params_shardings(params, mesh, fsdp=fsdp),
-                "opt": partition.to_shardings(
-                    partition.opt_state_pspecs(opt_state, params, mesh,
-                                               fsdp=fsdp), mesh),
-            }
-            start_step, state = ckpt.restore_resharded(ckpt_dir, state_tpl, sh)
+            step, state = ckpt.restore_resharded(
+                ckpt_dir, state_tpl, _shardings(params, opt_state))
         else:
-            start_step, state = ckpt.restore(ckpt_dir, state_tpl)
-        params, opt_state = state["params"], state["opt"]
+            step, state = ckpt.restore(ckpt_dir, state_tpl)
+        return step, state["params"], state["opt"]
+
+    def _host_state(step):
+        """The state.json resume payload: autotune cache + guard state —
+        a restart re-enters with warm schedules and an intact ladder."""
+        extra = {"step": step, "autotune": _autotune.export_state()}
+        if guard is not None:
+            extra["guard"] = guard.export_state()
+        return extra
+
+    if ckpt_dir and resume and ckpt.latest_step(ckpt_dir) is not None:
+        start_step, params, opt_state = _restore_latest(params, opt_state)
         resumed_from = start_step
+        host_state = ckpt.load_state(ckpt_dir, start_step)
+        if host_state:
+            _autotune.import_state(host_state.get("autotune") or {})
+            if guard is not None and host_state.get("guard"):
+                guard.import_state(host_state["guard"])
 
     if mesh is not None:
         p_sh = partition.params_shardings(params, mesh, fsdp=fsdp)
@@ -133,41 +178,75 @@ def train_loop(
         import contextlib
         ctx = contextlib.nullcontext
 
-    losses = []
+    losses: list = []                 # host floats, flushed chunkwise
+    pending: list = []                # device values awaiting one sync
     detector = StragglerDetector()
     with (mesh if mesh is not None else _null()), ctx():
         for step in range(start_step, steps):
             batch = lm_batch(tcfg.seed, step, batch=batch_size,
                              seq_len=seq_len, vocab=cfg.vocab_size)
+            # Fault-injection taps (runtime/faults.py): zero-cost
+            # passthroughs unless the chaos harness armed these sites.
+            params = _faults.tap("train:params", params, step=step)
+            opt_state = _faults.tap("train:opt_state", opt_state, step=step)
             t0 = time.time()
             params, opt_state, metrics = jitted(params, opt_state, batch)
             # Do NOT materialize metrics here: float(metrics["loss"]) is a
             # device→host sync that stalls dispatch EVERY step, serializing
             # the loop and poisoning dt (it measures the sync, not the
             # step).  Keep losses as device values; sync only on steps that
-            # actually read them.
+            # actually read them — guarded runs opt into the per-step sync,
+            # that is the cost of a verdict every step.
             dt = time.time() - t0
             slow = detector.observe(step, dt)
-            losses.append(metrics["loss"])
+            pending.append(metrics["loss"])
+            if len(pending) >= loss_flush_steps:
+                # chunked materialization: one sync per chunk bounds the
+                # number of live device values without a per-step stall
+                losses.extend(float(l) for l in pending)
+                pending.clear()
+            verdict = "ok"
+            host: Optional[Dict[str, float]] = None
+            if guard is not None:
+                host = {k: float(v) for k, v in metrics.items()}
+                verdict = guard.observe_step(
+                    step, loss=host.get("loss"),
+                    grad_norm=host.get("grad_norm"),
+                    skipped=host.get("skipped"))
             log_step = log_every and step % log_every == 0
             if on_metrics or log_step:
-                host = {k: float(v) for k, v in metrics.items()}
+                if host is None:
+                    host = {k: float(v) for k, v in metrics.items()}
                 if on_metrics:
-                    on_metrics(step, {**host, "time_s": dt, "straggler": slow})
+                    on_metrics(step, {**host, "time_s": dt, "straggler": slow,
+                                      "verdict": verdict})
                 if log_step:
                     print(f"step {step:5d} loss {host['loss']:8.4f} "
                           f"gnorm {host['grad_norm']:8.3f} "
                           f"lr {host['lr']:.2e} {dt*1e3:7.1f} ms"
-                          + ("  [straggler]" if slow else ""))
+                          + ("  [straggler]" if slow else "")
+                          + ("  [skipped]" if host.get("skipped") else ""))
+            if verdict in ("rollback", "degrade"):
+                if verdict == "degrade":
+                    # the ladder's last rung before giving up: demote every
+                    # suspect spec one schedule down (compact → predicated
+                    # → dense), then restore like a rollback
+                    guard.degrade()
+                if ckpt_dir and ckpt.latest_step(ckpt_dir) is not None:
+                    _, params, opt_state = _restore_latest(params, opt_state)
             if ckpt_dir and tcfg.checkpoint_every and \
-                    (step + 1) % tcfg.checkpoint_every == 0:
+                    (step + 1) % tcfg.checkpoint_every == 0 and \
+                    verdict == "ok":
+                # never checkpoint an unhealthy step — a rollback must have
+                # an intact state to land on
                 ckpt.save(ckpt_dir, step + 1,
                           {"params": params, "opt": opt_state},
-                          keep=tcfg.keep_checkpoints)
+                          keep=tcfg.keep_checkpoints,
+                          extra=_host_state(step + 1))
     if ckpt_dir:
         ckpt.save(ckpt_dir, steps, {"params": params, "opt": opt_state},
-                  keep=tcfg.keep_checkpoints)
-    losses = [float(l) for l in losses]   # one sync, after the loop
+                  keep=tcfg.keep_checkpoints, extra=_host_state(steps))
+    losses.extend(float(l) for l in pending)   # final chunk sync
     return {"params": params, "opt_state": opt_state, "losses": losses,
             "straggler": detector, "resumed_from": resumed_from}
 

@@ -29,6 +29,12 @@ class OptConfig:
     eps: float = 1e-8
     grad_clip: float = 1.0
     loss_scale: float = 0.0          # 0 → disabled
+    emit_guard_stats: bool = False   # count runtime non-finite skips under
+                                     # guard:nonfinite_skip via an async
+                                     # host callback (the train loop turns
+                                     # this on when a StepGuard is
+                                     # installed) — otherwise the skip is
+                                     # only visible in metrics["skipped"]
 
 
 def cosine_lr(step: jnp.ndarray, cfg: OptConfig) -> jnp.ndarray:
@@ -78,6 +84,10 @@ def adamw_update(
     gnorm = global_norm(g32)
     # non-finite guard (fp16 overflow): skip the update, keep state.
     finite = jnp.isfinite(gnorm)
+    if cfg.emit_guard_stats:
+        from repro.kernels import stats
+        stats.record_at_runtime("guard:nonfinite_skip",
+                                (~finite).astype(jnp.float32))
     clip = jnp.where(gnorm > cfg.grad_clip, cfg.grad_clip / (gnorm + 1e-9), 1.0)
     g32 = jax.tree.map(lambda g: g * clip, g32)
 

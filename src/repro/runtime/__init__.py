@@ -1,0 +1,14 @@
+"""Guarded execution (docs/resilience.md): per-step health verdicts, a
+skip → rollback → degrade ladder, and the deterministic fault-injection
+harness that proves every fault class is detected, attributed and
+survived.
+
+  * ``runtime.guards``  — ``StepGuard``: folds per-step health signals
+    (non-finite loss/grad-norm, overflow-fallback and registry-miss
+    counters, bitmap-consistency probes) into a verdict
+    ``ok | skip | rollback | degrade``, recorded under ``guard:*`` stats
+    keys and acted on by ``launch.train.train_loop``.
+  * ``runtime.faults``  — seeded fault injection addressable by site, and
+    the chaos matrix (``python -m repro.runtime.faults --matrix``).
+"""
+from .guards import GuardConfig, StepGuard, VERDICTS  # noqa: F401

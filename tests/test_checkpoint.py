@@ -50,8 +50,78 @@ def test_crashed_tmp_dirs_are_invisible_and_cleaned(tmp_path):
 
 def test_shape_mismatch_rejected(tmp_path):
     ckpt.save(str(tmp_path), 1, {"w": jnp.zeros((3, 3))})
-    with pytest.raises(AssertionError):
-        ckpt.restore(str(tmp_path), {"w": jnp.zeros((4, 4))})
+    with pytest.raises(ckpt.CheckpointError) as ei:
+        ckpt.restore(str(tmp_path), {"w": jnp.zeros((4, 4))},
+                     step=1)                  # explicit step: no fallback
+    assert ei.value.step == 1                 # typed context, not a bare
+    assert ei.value.leaf == "leaf_00000"      # assert (python -O erases)
+
+
+def test_crash_mid_save_restores_previous_and_prunes(tmp_path):
+    """A writer that died mid-save (planted .tmp dir) plus a torn final
+    write (truncated leaves.npz) in the newest step: auto-resume must land
+    on the previous intact checkpoint, count the fallback, and the next
+    save must clear all wreckage."""
+    from repro.kernels import stats
+    t2, t4 = _tree(2), _tree(4)
+    ckpt.save(str(tmp_path), 2, t2)
+    ckpt.save(str(tmp_path), 4, t4)
+    os.makedirs(tmp_path / "step_00000006.tmp")     # crashed writer
+    with open(tmp_path / "step_00000004" / "leaves.npz", "r+b") as f:
+        f.truncate(10)                              # torn newest payload
+    step, back = ckpt.restore(str(tmp_path), t2)
+    assert step == 2
+    for a, b in zip(jax.tree.leaves(t2), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(a, b)
+    assert stats.guard_counts().get("guard:ckpt_fallback", 0) >= 1
+    # the corrupt newest was quarantined, not offered again
+    assert ckpt.latest_step(str(tmp_path)) == 2
+    assert any(d.endswith(".corrupt") for d in os.listdir(tmp_path))
+    ckpt.save(str(tmp_path), 6, t4)                 # next save prunes
+    left = os.listdir(tmp_path)
+    assert not any(d.endswith((".tmp", ".old", ".corrupt")) for d in left)
+
+
+def test_unreadable_npz_is_typed_not_raw(tmp_path):
+    """np.load failures surface as CheckpointCorruptError (the
+    fallback-able class), never a raw zipfile/OS error."""
+    ckpt.save(str(tmp_path), 3, _tree())
+    with open(tmp_path / "step_00000003" / "leaves.npz", "wb") as f:
+        f.write(b"not a zip")
+    with pytest.raises(ckpt.CheckpointCorruptError) as ei:
+        ckpt.restore(str(tmp_path), _tree(), step=3)
+    assert ei.value.step == 3
+    # auto-resume with everything corrupt: typed terminal error
+    with pytest.raises(ckpt.CheckpointError):
+        ckpt.restore(str(tmp_path), _tree())
+
+
+def test_same_step_rewrite_never_destroys_previous(tmp_path):
+    """Re-saving an existing step keeps the old dir until the new commit
+    lands (moved aside, deleted after) — and an injected crash at the
+    commit point leaves the ORIGINAL intact."""
+    from repro.runtime import faults
+    t = _tree(1)
+    ckpt.save(str(tmp_path), 5, t)
+    faults.arm(faults.Fault("checkpoint:pre_commit", "crash"))
+    try:
+        with pytest.raises(faults.InjectedCrash):
+            ckpt.save(str(tmp_path), 5, _tree(9))
+    finally:
+        faults.disarm()
+    step, back = ckpt.restore(str(tmp_path), t)
+    assert step == 5
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_state_json_roundtrip(tmp_path):
+    ckpt.save(str(tmp_path), 2, _tree(), extra={"autotune": {"x": 1}})
+    assert ckpt.load_state(str(tmp_path)) == {"autotune": {"x": 1}}
+    assert ckpt.load_state(str(tmp_path), 2) == {"autotune": {"x": 1}}
+    ckpt.save(str(tmp_path), 4, _tree())          # no extra
+    assert ckpt.load_state(str(tmp_path)) is None
+    assert ckpt.load_state(str(tmp_path), 2) == {"autotune": {"x": 1}}
 
 
 def test_train_resume_bit_identical(tmp_path):

@@ -1,0 +1,291 @@
+"""Guarded execution (docs/resilience.md): the StepGuard verdict ladder,
+the autotune degradation/quarantine machinery, the fault-injection sites,
+and host-state persistence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import policy as pol
+from repro.kernels import autotune, stats
+from repro.kernels.ops import GemmMasks, sparse_gemm
+from repro.runtime import faults
+from repro.runtime.guards import (GuardConfig, StepGuard, VERDICTS,
+                                  reference_bitmap)
+
+
+# ---------------------------------------------------------------------------
+# StepGuard: the verdict state machine
+# ---------------------------------------------------------------------------
+
+def test_healthy_steps_stay_ok():
+    g = StepGuard()
+    for s in range(5):
+        assert g.observe_step(s, loss=1.0, grad_norm=0.5, skipped=0.0) == "ok"
+    assert stats.guard_counts()["guard:verdict:ok"] == 5
+
+
+@pytest.mark.parametrize("bad", [
+    dict(loss=float("nan")), dict(loss=float("inf")),
+    dict(grad_norm=float("nan")), dict(skipped=1.0)])
+def test_any_nonfinite_signal_is_a_skip(bad):
+    g = StepGuard()
+    assert g.observe_step(0, **{"loss": 1.0, "grad_norm": 1.0,
+                                "skipped": 0.0, **bad}) == "skip"
+
+
+def test_skip_budget_escalates_to_rollback_then_degrade():
+    g = StepGuard(GuardConfig(max_consecutive_skips=2, max_rollbacks=1,
+                              rollback_backoff=4))
+    seq = [g.observe_step(s, loss=float("nan")) for s in range(7)]
+    # 2 skips → rollback; budget restarts; 2 skips → degrade (rollback
+    # quota exhausted while still hot)
+    assert seq == ["skip", "skip", "rollback", "skip", "skip",
+                   "degrade", "skip"]
+    gc = stats.guard_counts()
+    assert gc["guard:verdict:rollback"] == 1
+    assert gc["guard:verdict:degrade"] == 1
+
+
+def test_clean_cooldown_forgets_rollbacks():
+    cfg = GuardConfig(max_consecutive_skips=1, max_rollbacks=1,
+                      rollback_backoff=2)
+    g = StepGuard(cfg)
+    assert g.observe_step(0, loss=float("nan")) == "skip"
+    assert g.observe_step(1, loss=float("nan")) == "rollback"
+    # backoff = 2 clean steps; after them the rollback counter cools, so
+    # the NEXT escalation is a rollback again, not a degrade
+    assert g.observe_step(2, loss=1.0) == "ok"
+    assert g.observe_step(3, loss=1.0) == "ok"
+    assert g.observe_step(4, loss=float("nan")) == "skip"
+    assert g.observe_step(5, loss=float("nan")) == "rollback"
+
+
+def test_guard_state_roundtrip():
+    g = StepGuard(GuardConfig(max_consecutive_skips=3))
+    for s, loss in enumerate([1.0, float("nan"), float("nan")]):
+        g.observe_step(s, loss=loss)
+    doc = g.export_state()
+    g2 = StepGuard(GuardConfig(max_consecutive_skips=3))
+    g2.import_state(doc)
+    # the resumed guard continues the SAME ladder: one more non-finite
+    # step exhausts the budget it inherited
+    assert g2.observe_step(3, loss=float("nan")) == "skip"
+    assert g2.observe_step(4, loss=float("nan")) == "rollback"
+    assert g2.verdicts[:3] == [(0, "ok"), (1, "skip"), (2, "skip")]
+
+
+def test_scan_counters_detects_registry_miss_storm():
+    g = StepGuard()
+    g.scan_counters()
+    for _ in range(3):
+        stats.record("registry:miss")
+    d = g.scan_counters(expected_registry_misses=1)
+    assert d["registry:miss"] == 3
+    assert stats.guard_counts().get("guard:registry_miss", 0) == 1
+    # structural misses alone don't trip it
+    stats.record("registry:miss")
+    g.scan_counters(expected_registry_misses=1)
+    assert stats.guard_counts().get("guard:registry_miss", 0) == 1
+
+
+# ---------------------------------------------------------------------------
+# Bitmap consistency probe
+# ---------------------------------------------------------------------------
+
+def test_probe_emit_accepts_consistent_pairs():
+    out = np.zeros((8, 8), np.float32)
+    out[0, 0] = 1.0
+    bits = reference_bitmap(out, (4, 4))
+    ok, corrected = StepGuard().probe_emit(out, bits, (4, 4))
+    assert ok
+    np.testing.assert_array_equal(np.asarray(corrected), bits)
+    assert "guard:bitmap_mismatch" not in stats.guard_counts()
+
+
+def test_probe_emit_flags_and_corrects_flips():
+    out = np.zeros((8, 12), np.float32)
+    out[5, 9] = 2.0
+    bits = reference_bitmap(out, (4, 4))
+    flipped = bits.copy()
+    flipped[0, 0] ^= 1
+    ok, corrected = StepGuard().probe_emit(out, flipped, (4, 4))
+    assert not ok
+    np.testing.assert_array_equal(np.asarray(corrected), bits)
+    assert stats.guard_counts()["guard:bitmap_mismatch"] == 1
+
+
+def test_reference_bitmap_matches_emitted_bitmap():
+    """The probe's oracle agrees with the kernel's emitted bitmap on a
+    clean run — otherwise every probe would be a false positive."""
+    rng = np.random.default_rng(0)
+    a = (rng.standard_normal((16, 12)) *
+         (rng.random((16, 12)) > 0.7)).astype(np.float32)
+    b = rng.standard_normal((12, 16)).astype(np.float32)
+    P = pol.IN_OUT.with_(kernel_impl="pallas", block=(8, 8, 8))
+    spec = P.gemm_spec(dims=(16, 12, 16)).with_(
+        epilogue=("bitmap_emit",), emit_gran=(4, 4))
+    out, bits = sparse_gemm(a, b, None, spec=spec)
+    ok, _ = StepGuard().probe_emit(out, bits, (4, 4))
+    assert ok
+
+
+# ---------------------------------------------------------------------------
+# Degradation ladder / quarantine (kernels/autotune.py)
+# ---------------------------------------------------------------------------
+
+def test_clamp_schedule_ladder():
+    assert autotune.clamp_schedule("compact", 0) == "compact"
+    assert autotune.clamp_schedule("compact", 1) == "predicated"
+    assert autotune.clamp_schedule("compact", 2) == "dense"
+    assert autotune.clamp_schedule("predicated", 1) == "predicated"
+    assert autotune.clamp_schedule("dense", 2) == "dense"
+
+
+def test_demote_emits_schema_compatible_log_rows():
+    """Demotion events ride the SAME decision-log row schema the audit
+    table and the wall-clock schema gate assert on (reason in the event
+    string, no new fields)."""
+    P = pol.IN_OUT_WR.with_(kernel_impl="pallas", block=(8, 8, 8))
+    spec = P.gemm_spec(dims=(16, 16, 16))
+    cache = autotune.get_cache()
+    key = cache.report_suspect(spec, (16, 16, 16), "bitmap")
+    assert cache.demote(key, reason="guard") == "predicated"
+    rows = autotune.log_rows()
+    assert rows and rows[-1]["event"] == "demote:guard"
+    expected = {"seq", "event", "key", "shape", "groups", "schedule",
+                "block", "live_frac", "operand_frac", "samples"}
+    assert set(rows[-1]) == expected
+    assert stats.guard_counts()["guard:demote"] == 1
+
+
+def test_quarantine_clamps_static_resolution():
+    """A demoted key stays demoted on the NON-autotuned resolution path:
+    policy.gemm_spec must not hand back the compact schedule."""
+    P = pol.IN_OUT_WR.with_(kernel_impl="pallas", block=(8, 8, 8))
+    dims = (16, 16, 16)
+    assert P.gemm_spec(dims=dims).schedule == "compact"
+    cache = autotune.get_cache()
+    cache.demote(autotune.key_for(P.gemm_spec(dims=dims), dims),
+                 reason="test")
+    clamped = P.gemm_spec(dims=dims)
+    assert clamped.schedule == "predicated"
+    assert stats.guard_counts()["guard:quarantine_clamp"] == 1
+    # one more rung: dense only
+    cache.demote(autotune.key_for(clamped, dims), reason="test")
+    assert P.gemm_spec(dims=dims).schedule == "dense"
+
+
+def test_shapeless_twin_demotion_covers_all_shapes():
+    """Demoting a spec's shapeless key demotes every shaped resolution of
+    that spec (the spec misbehaves, not one shape of it)."""
+    P = pol.IN_OUT_WR.with_(kernel_impl="pallas", block=(8, 8, 8))
+    spec = P.gemm_spec(dims=(16, 16, 16))
+    shapeless = autotune.key_for(spec, None)
+    autotune.get_cache().demote(shapeless, reason="test")
+    assert P.gemm_spec(dims=(16, 16, 16)).schedule == "predicated"
+    assert P.gemm_spec(dims=(32, 16, 8)).schedule == "predicated"
+
+
+def test_persistent_overflow_autodemotes_with_log_event():
+    """The acceptance criterion: a spec whose compact queue persistently
+    overflows is demoted off the compact schedule, with a
+    ``demote:overflow`` event in the decision log."""
+    autotune.reset(overflow_demote_after=3)
+    rng = np.random.default_rng(1)
+    a = rng.standard_normal((16, 16)).astype(np.float32)
+    b = rng.standard_normal((16, 16)).astype(np.float32)
+    mask = np.array([[1, 1], [1, 1]], dtype=np.int32)
+    P = pol.IN_OUT_WR.with_(kernel_impl="pallas", block=(8, 8, 8))
+    dims = (16, 16, 16)
+    ref = a @ b
+    faults.arm(faults.Fault("gemm:spec", "queue_overflow"))
+    try:
+        for _ in range(4):
+            spec = P.gemm_spec(dims=dims)
+            out = sparse_gemm(a, b, GemmMasks(out=mask), spec=spec)
+            np.testing.assert_allclose(np.asarray(out), ref, atol=1e-4)
+    finally:
+        faults.disarm()
+    c = stats.counts()
+    assert c["fallback:queue_overflow"] >= 3     # counted every overflow
+    demotes = [r for r in autotune.log_rows()
+               if r["event"] == "demote:overflow"]
+    assert len(demotes) == 1
+    assert P.gemm_spec(dims=dims).schedule == "predicated"
+
+
+def test_autotune_state_roundtrip_preserves_quarantine():
+    P = pol.IN_OUT_WR.with_(kernel_impl="pallas", block=(8, 8, 8))
+    dims = (16, 16, 16)
+    cache = autotune.get_cache()
+    cache.demote(autotune.key_for(P.gemm_spec(dims=dims), dims),
+                 reason="test")
+    doc = autotune.export_state()
+    autotune.reset()
+    assert P.gemm_spec(dims=dims).schedule == "compact"   # fresh cache
+    autotune.import_state(doc)
+    assert P.gemm_spec(dims=dims).schedule == "predicated"
+    rows = autotune.log_rows()
+    assert any(r["event"] == "demote:test" for r in rows)
+
+
+# ---------------------------------------------------------------------------
+# Fault-injection harness
+# ---------------------------------------------------------------------------
+
+def test_unknown_site_and_kind_rejected():
+    with pytest.raises(ValueError):
+        faults.arm(faults.Fault("nonsense:site", "nan"))
+    with pytest.raises(ValueError):
+        faults.arm(faults.Fault("gemm:spec", "nan"))
+
+
+def test_faults_are_deterministic_and_step_gated():
+    f = faults.arm(faults.Fault("train:params", "nan", step=3, seed=5))
+    try:
+        tree = {"w": jnp.ones((4, 4)), "b": jnp.ones((3,))}
+        same = faults.tap("train:params", tree, step=1)
+        assert same is tree and f.fired == 0          # wrong step: no-op
+        out1 = faults.tap("train:params", tree, step=3)
+        out2 = faults.tap("train:params", tree, step=3)
+        assert f.fired == 2
+        for l1, l2 in zip(jax.tree_util.tree_leaves(out1),
+                          jax.tree_util.tree_leaves(out2)):
+            np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+        assert any(bool(jnp.isnan(l).any())
+                   for l in jax.tree_util.tree_leaves(out1))
+    finally:
+        faults.disarm()
+
+
+def test_disarm_restores_hooks():
+    from repro.core import sparse_tensor
+    from repro.kernels import ops
+    faults.arm(faults.Fault("gemm:spec", "queue_overflow"))
+    assert ops._TAMPER_HOOK is not None
+    assert sparse_tensor._REGISTER_HOOK is not None
+    faults.disarm()
+    assert ops._TAMPER_HOOK is None
+    assert sparse_tensor._REGISTER_HOOK is None
+
+
+def test_chaos_matrix_eager_cases_green():
+    """The eager slice of the chaos matrix (no training loops — those run
+    in the CI chaos job) must be green: every fault detected, attributed
+    and survived."""
+    rows = faults.run_matrix(["bitmap", "queue", "registry", "ckpt"])
+    assert len(rows) == 5
+    for r in rows:
+        assert r.detected, (r.fault, r.detail)
+        assert r.survived, (r.fault, r.detail)
+        assert r.guard_key
+
+
+def test_matrix_csv_written(tmp_path):
+    rows = faults.run_matrix(["ckpt_crash"])
+    p = tmp_path / "chaos.csv"
+    faults.write_csv(rows, str(p))
+    text = p.read_text().splitlines()
+    assert text[0].startswith("fault,site,kind,detected")
+    assert len(text) == 1 + len(rows)
