@@ -42,6 +42,23 @@ pre-PR-8 two-launch pipeline).  ``check_emit_schema`` validates the key
 set, the coverage, and — on full-geometry documents, i.e. the committed
 artifact — the headline claim: fused strictly beats GEMM-then-scan on
 every (workload, schedule) cell.
+
+``BENCH_9.json`` is the sparsity-on-the-wire evidence (PR 10): one
+``collective`` table comparing, per mesh shape × live fraction, the SAME
+block-sparse gradient all-reduced two ways inside a ``shard_map`` body —
+``dense_psum`` (every block on the wire) and ``bitmap`` (the
+``sharding.collectives.sparse_psum`` compressed reduce: psum the tiny
+block bitmap, gather/psum only union-live blocks into a static
+``ceil(cutoff·nblocks)`` buffer, runtime dense fallback past the
+cutoff).  The per-shard block masks are CORRELATED (the same pattern on
+every shard) — the dW regime the collective exists for; uncorrelated
+masks union to ~dense and honestly take the fallback.
+``check_collective_schema`` validates the key set and coverage, and —
+on full-geometry documents — the headline claim: bitmap beats dense at
+the lowest live fraction on every mesh, and past the cutoff (where the
+runtime fallback engages) never loses more than the bitmap-psum
+overhead allowance.  BENCH_9 generation is opt-in (``--collective-out``)
+so BENCH_7/8-only invocations cannot clobber the committed artifact.
 """
 from __future__ import annotations
 
@@ -63,11 +80,25 @@ import jax.numpy as jnp
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BENCH_PATH = os.path.join(REPO_ROOT, "BENCH_7.json")
 BENCH8_PATH = os.path.join(REPO_ROOT, "BENCH_8.json")
+BENCH9_PATH = os.path.join(REPO_ROOT, "BENCH_9.json")
 
 SCHEMA_VERSION = 1
 SCHEDULES = ("predicated", "compact", "dense")
 EMIT_SCHEDULES = ("predicated", "compact")   # the pallas emit-capable pair
 EMIT_VARIANTS = ("plain", "fused", "gemm_scan")
+COLLECTIVE_VARIANTS = ("dense_psum", "bitmap")
+COLLECTIVE_LIVE_FRACS = (0.05, 0.1, 0.25, 1.0)
+# The bench cutoff is deliberately tight (capacity = 1/8 of the blocks):
+# on a shared-memory CPU "mesh" the wire IS the memory bus, so the
+# compressed path's local gather/scatter copies cost the same per byte as
+# the psum they save — compression only wins when capacity + overhead
+# stays well under the dense volume.  A real interconnect (wire ≫ memory)
+# widens the win and would justify the looser training default
+# (``sharding.spmd_step.DEFAULT_CUTOFF``).
+COLLECTIVE_CUTOFF = 0.125
+# Fallback rows (live_frac > cutoff) may not beat dense — they ARE dense
+# plus a tiny bitmap psum + branch; allow that overhead, bounded.
+COLLECTIVE_FALLBACK_SLACK = 1.25
 
 # The exact per-table row key sets the BENCH files commit to.  The schema
 # checkers fail on ANY deviation — added keys are drift just like missing.
@@ -79,6 +110,9 @@ ROW_KEYS = {
     "emit": ("table", "workload", "schedule", "variant", "m", "k", "n",
              "groups", "block", "emit_gran", "us_median", "us_iqr",
              "reps", "warmup"),
+    "collective": ("table", "mesh", "devices", "m", "n", "block",
+                   "live_frac", "cutoff", "variant", "us_median", "us_iqr",
+                   "reps", "warmup"),
 }
 AUTOTUNE_LOG_KEYS = ("seq", "event", "key", "shape", "groups", "schedule",
                      "block", "live_frac", "operand_frac", "samples")
@@ -310,6 +344,123 @@ def bench_emit_rows(*, smoke: bool) -> List[dict]:
                     "emit_gran": "x".join(map(str, emit_gran)),
                     **measure(lambda: jfn(dy, wt, masks, mult), **timing),
                 })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Bitmap-compressed all-reduce vs dense psum (the BENCH_9 evidence)
+# ---------------------------------------------------------------------------
+
+def _collective_meshes() -> List[Tuple[Tuple[int, ...], Tuple[str, ...]]]:
+    """Mesh shapes the collective table sweeps, derived from the devices
+    actually visible: always the flat data mesh, plus a 2-D (data, pod)
+    factoring when the device count supports it — the compressed reduce
+    must not regress when the psum spans more than one mesh axis."""
+    n_dev = jax.device_count()
+    meshes = [((n_dev,), ("data",))]
+    if n_dev >= 4 and n_dev % 2 == 0:
+        meshes.append(((2, n_dev // 2), ("data", "pod")))
+    return meshes
+
+
+def bench_collective_rows(*, smoke: bool) -> List[dict]:
+    """One measured row per mesh × live fraction × variant.
+
+    Both variants all-reduce the SAME (devices, M, N) block-sparse
+    gradient stack inside a jitted ``shard_map`` body; ``dense_psum`` is
+    the uncompressed baseline, ``bitmap`` is ``sparse_psum`` fed the
+    shard-local block bitmap (gran == wire block, so no coarsening is
+    timed — the lifecycle already owns derivation).
+
+    Workload construction is the honest part:
+
+      * the live blocks are drawn ONCE per (mesh, live) cell and repeated
+        on every shard — dW gradients in data-parallel training share
+        sparsity structure across shards (same weights, same σ′
+        geometry), and that correlation is what keeps the union small
+        (uncorrelated shard masks union to ~dense and take the fallback);
+      * the sparsity is ROW-BLOCK structured and the wire block spans the
+        full row — the paper's regime: a feature whose activation the
+        ReLU killed across the whole batch zeroes the entire dW row, so
+        whole row-blocks go dead together.  Full-width wire blocks also
+        keep the compact gather/scatter contiguous (each block one
+        memcpy), which on a shared-memory CPU mesh is the difference
+        between compression winning and drowning in strided-gather cost;
+      * the live count is exact (a permutation draw, not a Bernoulli
+        hope), so ``live_frac`` in each row is the workload's true wire
+        live fraction and the cutoff comparison is sharp:
+        ``live_frac ≤ cutoff`` rows exercise the compressed path,
+        ``live_frac > cutoff`` rows the runtime dense fallback.
+
+    ``sparse_psum`` is fed the FINE (gran-level) bitmap and told the
+    wire block, so the timed path includes the gran→wire coarsening the
+    lifecycle mandates (derivation, never a rescan)."""
+    from repro.kernels import stats
+
+    # The fallback/compressed runtime counters are host callbacks — per
+    # execution, per shard.  They are audit instrumentation, not the
+    # collective; staged into a timed trace they'd dominate the medians.
+    prev_counting = stats.set_runtime_counting(False)
+    try:
+        return _collective_rows_inner(smoke=smoke)
+    finally:
+        stats.set_runtime_counting(prev_counting)
+
+
+def _collective_rows_inner(*, smoke: bool) -> List[dict]:
+    import numpy as np
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.collectives import dense_psum, sparse_psum
+
+    n_dev = jax.device_count()
+    b0 = 32 if smoke else 128            # row-block height; wire = (b0, N)
+    m, n = (512, 256) if smoke else (8192, 2048)
+    gran = (b0, b0)                      # the fine bitmap's granularity
+    timing = dict(warmup=1, reps=3) if smoke else dict(warmup=2, reps=7)
+    mt, nt_g = m // b0, n // b0          # fine-bitmap grid; wire nblk = mt
+
+    rows: List[dict] = []
+    for shape, names in _collective_meshes():
+        mesh = jax.make_mesh(shape, names)
+        spec_in = P(tuple(names))       # dim 0 sharded over every axis
+        for live in COLLECTIVE_LIVE_FRACS:
+            rng = np.random.default_rng(hash((shape, live)) % (2 ** 31))
+            count = max(1, min(mt, round(live * mt)))
+            row_live = np.zeros(mt, np.int32)
+            row_live[rng.permutation(mt)[:count]] = 1
+            expand = np.repeat(row_live, b0).astype(np.float32)[:, None]
+            data = (rng.standard_normal((n_dev, m, n)).astype(np.float32)
+                    * expand[None])
+            bm = np.repeat(row_live[:, None], nt_g, 1)
+            xs = jnp.asarray(data)
+            bs = jnp.asarray(np.broadcast_to(bm, (n_dev, mt, nt_g)).copy())
+
+            def body_dense(x, b):
+                return dense_psum(x[0], axis_name=names)
+
+            def body_bitmap(x, b):
+                return sparse_psum(x[0], b[0], gran, axis_name=names,
+                                   block=(b0, n),
+                                   cutoff=COLLECTIVE_CUTOFF)
+
+            for variant, body in (("dense_psum", body_dense),
+                                  ("bitmap", body_bitmap)):
+                fn = jax.jit(shard_map(
+                    body, mesh=mesh, in_specs=(spec_in, spec_in),
+                    out_specs=P(), check_rep=False))
+                rows.append({
+                    "table": "collective",
+                    "mesh": "x".join(map(str, shape)),
+                    "devices": n_dev, "m": m, "n": n,
+                    "block": f"{b0}x{n}",
+                    "live_frac": live, "cutoff": COLLECTIVE_CUTOFF,
+                    "variant": variant,
+                    **measure(lambda: fn(xs, bs), **timing),
+                })
+            del data, xs, bs
     return rows
 
 
@@ -580,6 +731,95 @@ def check_emit_schema(doc: dict) -> List[str]:
     return errs
 
 
+def check_collective_schema(doc: dict) -> List[str]:
+    """Validate a BENCH_9 document; returns a list of problems (empty ⇒
+    OK).  Checks the exact ``collective`` row key set, the coverage (both
+    variants measured for every live fraction on ≥1 mesh, and every mesh
+    covering the full live-fraction sweep), positive fenced medians, AND
+    — on full-geometry documents (the committed artifact) — the headline
+    claim: the bitmap-compressed reduce strictly beats the dense psum at
+    the LOWEST live fraction on every mesh, and on past-cutoff rows
+    (where ``sparse_psum`` runtime-falls-back to dense) costs at most
+    ``COLLECTIVE_FALLBACK_SLACK``× dense — the fallback means the
+    compressed path never loses more than its tiny bitmap-psum + branch
+    overhead.  Smoke documents skip only the claim (reduced reps on
+    shared CI runners make a strict wall-clock inequality a coin-flip)."""
+    errs: List[str] = []
+    for top in ("schema_version", "bench", "jax_backend", "geometry",
+                "rows"):
+        if top not in doc:
+            errs.append(f"missing top-level key {top!r}")
+    if errs:
+        return errs
+    if doc["schema_version"] != SCHEMA_VERSION:
+        errs.append(f"schema_version {doc['schema_version']} != "
+                    f"{SCHEMA_VERSION}")
+    if doc["bench"] != "BENCH_9":
+        errs.append(f"bench {doc['bench']!r} != 'BENCH_9'")
+
+    want = set(ROW_KEYS["collective"])
+    cells: Dict[Tuple[str, float], Dict[str, float]] = {}
+    cutoffs: Dict[str, float] = {}
+    for i, row in enumerate(doc["rows"]):
+        if row.get("table") != "collective":
+            errs.append(f"rows[{i}]: unknown table {row.get('table')!r}")
+            continue
+        got = set(row)
+        if got != want:
+            errs.append(f"rows[{i}] (collective): key drift "
+                        f"+{sorted(got - want)} -{sorted(want - got)}")
+            continue
+        if row["variant"] not in COLLECTIVE_VARIANTS:
+            errs.append(f"rows[{i}]: unknown variant {row['variant']!r}")
+            continue
+        if not (isinstance(row["us_median"], (int, float))
+                and row["us_median"] > 0):
+            errs.append(f"rows[{i}] (collective): non-positive us_median")
+            continue
+        cells.setdefault((row["mesh"], row["live_frac"]), {})[
+            row["variant"]] = row["us_median"]
+        cutoffs[row["mesh"]] = row["cutoff"]
+
+    if not cells:
+        errs.append("collective coverage: no rows")
+        return errs
+    by_mesh: Dict[str, set] = {}
+    for (mesh_name, live), by_variant in cells.items():
+        by_mesh.setdefault(mesh_name, set()).add(live)
+        missing = sorted(set(COLLECTIVE_VARIANTS) - set(by_variant))
+        if missing:
+            errs.append(f"collective coverage: {mesh_name}@{live} missing "
+                        f"variants {missing}")
+    for mesh_name, lives in by_mesh.items():
+        missing = sorted(set(COLLECTIVE_LIVE_FRACS) - lives)
+        if missing:
+            errs.append(f"collective coverage: {mesh_name} missing live "
+                        f"fractions {missing}")
+
+    if doc.get("geometry") != "full":
+        return errs                       # claim gated on committed runs
+    for mesh_name, lives in sorted(by_mesh.items()):
+        cutoff = cutoffs[mesh_name]
+        lowest = min(lives)
+        for live in sorted(lives):
+            by_variant = cells[(mesh_name, live)]
+            if set(by_variant) != set(COLLECTIVE_VARIANTS):
+                continue                  # coverage error already reported
+            bm, dn = by_variant["bitmap"], by_variant["dense_psum"]
+            if live == lowest and not bm < dn:
+                errs.append(
+                    f"claim: bitmap ({bm}us) not faster than dense_psum "
+                    f"({dn}us) on {mesh_name}@{live} — the compressed "
+                    f"reduce must win where the union is sparse")
+            if live > cutoff and not bm <= dn * COLLECTIVE_FALLBACK_SLACK:
+                errs.append(
+                    f"claim: bitmap ({bm}us) > {COLLECTIVE_FALLBACK_SLACK}x "
+                    f"dense_psum ({dn}us) on {mesh_name}@{live} — past the "
+                    f"cutoff the runtime fallback must keep the compressed "
+                    f"path from losing")
+    return errs
+
+
 # ---------------------------------------------------------------------------
 # Driver
 # ---------------------------------------------------------------------------
@@ -608,6 +848,16 @@ def run_emit_bench(*, smoke: bool = False) -> dict:
     }
 
 
+def run_collective_bench(*, smoke: bool = False) -> dict:
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "bench": "BENCH_9",
+        "jax_backend": jax.default_backend(),
+        "geometry": "smoke" if smoke else "full",
+        "rows": bench_collective_rows(smoke=smoke),
+    }
+
+
 def write_outputs(doc: dict, out_path: str) -> None:
     from benchmarks.run import RESULTS_DIR, write_rows
     with open(out_path, "w") as f:
@@ -625,8 +875,9 @@ def write_outputs(doc: dict, out_path: str) -> None:
 
 
 def _checker_for(doc: dict):
-    return check_emit_schema if doc.get("bench") == "BENCH_8" \
-        else check_schema
+    return {"BENCH_8": check_emit_schema,
+            "BENCH_9": check_collective_schema}.get(
+                doc.get("bench"), check_schema)
 
 
 def main(argv=None) -> int:
@@ -638,6 +889,17 @@ def main(argv=None) -> int:
     ap.add_argument("--emit-out", default=BENCH8_PATH,
                     help="BENCH_8 (emit table) JSON path (default: "
                          "repo-root BENCH_8.json)")
+    ap.add_argument("--collective-out", nargs="?", const=BENCH9_PATH,
+                    default=None, metavar="PATH",
+                    help="ALSO generate the BENCH_9 (collective table) "
+                         "document at PATH (default when the flag is bare: "
+                         "repo-root BENCH_9.json).  Opt-in: without this "
+                         "flag BENCH_9 is never written, so BENCH_7/8 "
+                         "regenerations cannot clobber the committed "
+                         "artifact")
+    ap.add_argument("--collective-only", action="store_true",
+                    help="generate ONLY the BENCH_9 document (skip "
+                         "BENCH_7/8) — the sharded-smoke CI job's mode")
     ap.add_argument("--check", metavar="PATH",
                     help="validate an existing BENCH file and exit "
                          "(the checker is picked by the file's 'bench' key)")
@@ -652,23 +914,42 @@ def main(argv=None) -> int:
         print(f"{args.check}: {'DRIFT' if errs else 'ok'}")
         return 1 if errs else 0
 
-    doc = run_bench(smoke=args.smoke)
-    doc8 = run_emit_bench(smoke=args.smoke)
-    errs = check_schema(doc) + check_emit_schema(doc8)
+    collective_out = args.collective_out
+    if args.collective_only and collective_out is None:
+        collective_out = BENCH9_PATH
+
+    outputs: List[Tuple[dict, str]] = []
+    if not args.collective_only:
+        outputs.append((run_bench(smoke=args.smoke), args.out))
+        outputs.append((run_emit_bench(smoke=args.smoke), args.emit_out))
+    if collective_out is not None:
+        outputs.append((run_collective_bench(smoke=args.smoke),
+                        collective_out))
+
+    errs = [e for doc, _ in outputs for e in _checker_for(doc)(doc)]
     if errs:
         for e in errs:
             print(f"SCHEMA: {e}", file=sys.stderr)
         return 1
-    write_outputs(doc, args.out)
-    write_outputs(doc8, args.emit_out)
-    for row in doc["rows"] + doc8["rows"]:
-        tag = f":{row['variant']}" if row["table"] == "emit" else ""
-        print(f"{row['table']},{row['workload']},{row['schedule']}{tag},"
-              f"{row['us_median']:.0f}us ±{row['us_iqr']:.0f}")
-    c = doc["autotune"]["counters"]
-    print(f"autotune: hits={c['hits']} misses={c['misses']} "
-          f"retunes={c['retunes']} log_rows={len(doc['autotune']['log'])}")
-    print(f"wrote {args.out} and {args.emit_out}")
+    for doc, path in outputs:
+        write_outputs(doc, path)
+    for doc, _ in outputs:
+        for row in doc["rows"]:
+            if row["table"] == "collective":
+                print(f"collective,{row['mesh']},live={row['live_frac']},"
+                      f"{row['variant']},{row['us_median']:.0f}us "
+                      f"±{row['us_iqr']:.0f}")
+            else:
+                tag = f":{row['variant']}" if row["table"] == "emit" else ""
+                print(f"{row['table']},{row['workload']},"
+                      f"{row['schedule']}{tag},"
+                      f"{row['us_median']:.0f}us ±{row['us_iqr']:.0f}")
+        if "autotune" in doc:
+            c = doc["autotune"]["counters"]
+            print(f"autotune: hits={c['hits']} misses={c['misses']} "
+                  f"retunes={c['retunes']} "
+                  f"log_rows={len(doc['autotune']['log'])}")
+    print("wrote " + " and ".join(path for _, path in outputs))
     return 0
 
 

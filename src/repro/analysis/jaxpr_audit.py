@@ -23,6 +23,16 @@ This module walks that jaxpr and checks, per activation:
   SPEC_UNRESOLVED  a ``sparse_gemm`` dispatch whose ``GemmSpec`` was not
                    resolved by ``SparsityPolicy.gemm_spec`` (trace-time
                    provenance via ``kernels.ops.collect_gemm_events``).
+  COLLECTIVE_UNTAGGED  a cross-shard collective (psum/all_gather/…)
+                   outside any ``repro:collective:*`` region — gradient
+                   traffic crossed the mesh without going through
+                   ``sharding/collectives``'s bitmap-aware entry points.
+
+All checks apply INSIDE ``shard_map`` bodies too: the generic sub-jaxpr
+descent picks up the ``shard_map`` equation's ``jaxpr`` param like any
+pjit/cond/scan, so the one-encode-per-activation and mask-derivation
+contracts are verified across the whole mesh (the body is traced once for
+all shards — one encode in the jaxpr IS one encode per shard per step).
 
 Violations are keyed by the innermost ``layer:<name>`` scope so reports
 read per-layer.  See docs/static_analysis.md for the full code catalogue.
@@ -53,7 +63,15 @@ TRIVIAL_PRIMS = {
     "concatenate", "copy", "stop_gradient", "rev",
 }
 
-GROUNDING_KINDS = {"encode", "scan", "derive", "queue"}
+# "collective" grounds masks too: the union bitmap a bitmap-psum produces
+# is derived metadata (an OR across shards of already-grounded bitmaps).
+GROUNDING_KINDS = {"encode", "scan", "derive", "queue", "collective"}
+
+# Cross-shard primitives that move tensor data over the interconnect.
+COLLECTIVE_PRIMS = {
+    "psum", "psum2", "all_reduce", "all_gather", "all_to_all",
+    "reduce_scatter", "ppermute", "pmax", "pmin",
+}
 
 
 @dataclasses.dataclass
@@ -342,6 +360,31 @@ def _check_dense_ops(walk: _Walk, workload,
     return deduped
 
 
+def _check_collectives(walk: _Walk, workload) -> List[Violation]:
+    """Every cross-shard data movement must sit in a collective region:
+    an untagged psum is gradient traffic that bypassed the bitmap-aware
+    all-reduce (and with it the compression, the stats keys, and the
+    fault-injection tap)."""
+    out, seen = [], set()
+    for info in walk.infos:
+        if info.eqn.primitive.name not in COLLECTIVE_PRIMS:
+            continue
+        if info.tag is not None and info.tag.kind == "collective":
+            continue
+        key = (info.layer, info.eqn.primitive.name,
+               info.tag.tag if info.tag else "")
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append(Violation(
+            "jaxpr", "COLLECTIVE_UNTAGGED", info.layer,
+            f"'{info.eqn.primitive.name}' outside any repro:collective "
+            f"region (scope: {info.tag.tag if info.tag else '<none>'}) — "
+            f"cross-shard traffic must go through sharding/collectives",
+            workload))
+    return out
+
+
 def audit_jaxpr(closed_jaxpr, *, workload: str = "",
                 expect_pallas: bool = True) -> List[Violation]:
     """Run every jaxpr-level check on an already-traced program."""
@@ -351,6 +394,7 @@ def audit_jaxpr(closed_jaxpr, *, workload: str = "",
     out += _check_rescan(walk, regions, workload)
     out += _check_masks_derived(walk, regions, workload)
     out += _check_dense_ops(walk, workload, expect_pallas)
+    out += _check_collectives(walk, workload)
     return out
 
 
@@ -411,6 +455,47 @@ def _ffn_step(batch: int = 4):
     return (lambda: jax.grad(step)(params))
 
 
+def _spmd_mesh():
+    """A 1-device mesh: the audit only TRACES, and a shard_map body's
+    jaxpr is mesh-size-independent — so the contract verified here holds
+    for any device count (the 8-device execution tests live in
+    tests/test_sparse_collectives.py)."""
+    return jax.make_mesh((1,), ("data",))
+
+
+def _ffn_spmd_step(batch: int = 4):
+    from repro.models.ffn import FFNConfig, ffn_apply, ffn_init
+    from repro.sharding import spmd_step
+    cfg = FFNConfig(d_model=16, d_ff=32, activation="relu",
+                    sparse_policy=_audit_policy())
+    params = ffn_init(jax.random.PRNGKey(0), cfg)
+    x = jnp.zeros((batch, cfg.d_model), jnp.float32)
+
+    def loss_fn(p, xb):
+        return (ffn_apply(p, xb, cfg) ** 2).sum()
+
+    f = spmd_step.make_spmd_grad_fn(loss_fn, _spmd_mesh())
+    return (lambda: f(params, x))
+
+
+def _cnn_spmd_step(name: str, *, image_size: int, width: float,
+                   batch: int = 2):
+    from repro.models.cnn import build_cnn
+    from repro.sharding import spmd_step
+    model = build_cnn(name, image_size=image_size, width=width,
+                      num_classes=10)
+    params = model.init(jax.random.PRNGKey(0))
+    images = jnp.zeros((batch, image_size, image_size, 3), jnp.float32)
+    labels = jnp.zeros((batch,), jnp.int32)
+    policy = _audit_policy()
+
+    def loss_fn(p, b):
+        return model.loss(p, b["images"], b["labels"], policy)
+
+    f = spmd_step.make_spmd_grad_fn(loss_fn, _spmd_mesh())
+    return (lambda: f(params, {"images": images, "labels": labels}))
+
+
 WORKLOADS = {
     # VGG16: the deep sequential CNN (dense convs at every depth).
     "vgg16": lambda: _cnn_step("vgg16", image_size=16, width=0.125),
@@ -419,6 +504,12 @@ WORKLOADS = {
     "mobilenet": lambda: _cnn_step("mobilenet", image_size=16, width=0.25),
     # ReLU-FFN: the linear-layer fused unit (act_matmul/matmul path).
     "ffn_relu": lambda: _ffn_step(),
+    # SPMD variants: the same units inside a shard_map body with the
+    # bitmap-compressed gradient all-reduce — the lifecycle contracts plus
+    # COLLECTIVE_UNTAGGED, verified through the shard_map descent.
+    "ffn_relu_spmd": lambda: _ffn_spmd_step(),
+    "vgg16_spmd": lambda: _cnn_spmd_step("vgg16", image_size=16,
+                                         width=0.125),
 }
 
 

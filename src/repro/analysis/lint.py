@@ -50,6 +50,8 @@ KNOWN_KEY_HEADS = {"encode", "scan", "scan_pallas", "emit", "queue", "gemm",
                    "conv",
                    # runtime guard layer (docs/resilience.md):
                    "guard", "registry", "fallback",
+                   # sharded collectives (docs/sharding.md):
+                   "collective",
                    # legacy heads normalized by stats._KEY_ALIASES:
                    "mm", "gmm", "grouped_mm"}
 FALLBACK_KEY = "conv:dense_fallback"

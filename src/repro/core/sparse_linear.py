@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops as kops
+from repro.kernels import stats
 from repro.kernels.ops import GemmMasks, GemmSpec
 # The freshly-computed dense-scan ORACLE the threaded bitmaps are
 # property-tested against — now lives in kernels.shapes (re-exported under
@@ -146,6 +147,30 @@ def _grad_sparse_tensor_linear(dy, dy32, policy: SparsityPolicy
     return SparseTensor(dy32, bitmap, (gr, gc))
 
 
+def _wg_bitmap(xt_mask, dyb_mask, kt: int, mt: int, nt: int):
+    """Derive the weight-gradient's block bitmap from the WG GEMM's two
+    operand masks: dW tile (i, j) can be nonzero only if SOME reduction
+    block m has both x̃ᵀ(i, m) and dy(m, j) live.  Pure mask algebra
+    (broadcast-AND, any-reduce over the reduction blocks) — no dense data
+    is touched, and deliberately NOT a dot_general: mask derivation must
+    never look like an untagged GEMM to the static auditor.  Exact on the
+    dead side (every partial product has an all-zero operand tile ⇒ the
+    dW block is exactly zero), conservative on the live side — precisely
+    the contract the bitmap-compressed gradient all-reduce
+    (sharding/collectives) relies on.  A missing operand mask degrades to
+    all-live on that side; both missing means no bitmap (dense collective).
+    """
+    if xt_mask is None and dyb_mask is None:
+        return None
+    with stats.lifecycle_scope("derive", "wg"):
+        a = xt_mask.astype(jnp.int32) if xt_mask is not None \
+            else jnp.ones((kt, mt), jnp.int32)
+        b = dyb_mask.astype(jnp.int32) if dyb_mask is not None \
+            else jnp.ones((mt, nt), jnp.int32)
+        return ((a[:, :, None] * b[None, :, :]).sum(axis=1) > 0) \
+            .astype(jnp.int32)
+
+
 # ---------------------------------------------------------------------------
 # relu_matmul — the composable unit
 # ---------------------------------------------------------------------------
@@ -238,7 +263,17 @@ def _act_matmul_bwd(policy: SparsityPolicy, act: str, res, dy):
         if _needs_grad_bitmap(policy) else None
     dyb_mask = st_dy.mask_for((bk, bn))
     dw = _mm(xt, dy32, None, xt_mask, dyb_mask, policy, jnp.float32)
-    return dx_pre, dw.astype(w.dtype)
+    dw = dw.astype(w.dtype)
+    # dW crosses the mesh in data-parallel training: register its derived
+    # block bitmap (keyed by the EXACT returned object, like the dy
+    # hand-off) so sharding/collectives.psum_grads can compress the
+    # all-reduce instead of rescanning the gradient.
+    register_grad_bitmap(
+        dw,
+        _wg_bitmap(xt_mask, dyb_mask, -(-w.shape[0] // bm),
+                   -(-x_pre.shape[0] // bk), -(-w.shape[1] // bn)),
+        (bm, bn))
+    return dx_pre, dw
 
 
 act_matmul.defvjp(_act_matmul_fwd, _act_matmul_bwd)
@@ -302,8 +337,14 @@ def _matmul_bwd(policy: SparsityPolicy, res, dy):
         dx = res_dx
     xt = x.astype(jnp.float32).T
     xt_mask = st.t_mask_for((bm, bk)) if _needs_grad_bitmap(policy) else None
-    dw = _mm(xt, dy32, None, xt_mask, st_dy.mask_for((bk, bn)), policy,
-             w.dtype)
+    dyb_mask = st_dy.mask_for((bk, bn))
+    dw = _mm(xt, dy32, None, xt_mask, dyb_mask, policy, w.dtype)
+    # Same WG hand-off as act_matmul: the collective consumes it.
+    register_grad_bitmap(
+        dw,
+        _wg_bitmap(xt_mask, dyb_mask, -(-w.shape[0] // bm),
+                   -(-x.shape[0] // bk), -(-w.shape[1] // bn)),
+        (bm, bn))
     return dx, dw
 
 

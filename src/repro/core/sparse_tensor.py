@@ -174,8 +174,12 @@ def conv_channel_granularity(channels: int,
 #
 # A bounded ring (not a dict) so stale entries from completed traces are
 # overwritten instead of accumulating; matching is by ``is``, so a stale
-# entry can never alias a live cotangent.
-_GRAD_BITMAP_RING_SIZE = 8
+# entry can never alias a live cotangent.  Sized so every WG bitmap of a
+# deep model's backward pass (vgg16: 13 convs + head) survives until the
+# step-level gradient collective consults the registry AFTER the whole
+# backward has run (sharding/collectives.psum_grads) — with the old size
+# of 8 the early layers' entries were already evicted by then.
+_GRAD_BITMAP_RING_SIZE = 64
 _GRAD_BITMAPS: list = []
 
 # Fault-injection tap (repro/runtime/faults.py): an installed hook may veto
@@ -208,7 +212,7 @@ def register_grad_bitmap(obj, bitmap: Optional[jnp.ndarray],
         del _GRAD_BITMAPS[0]
 
 
-def lookup_grad_bitmap(obj):
+def lookup_grad_bitmap(obj, *, peek: bool = False):
     """The ``(bitmap, gran)`` a producer registered for this exact
     cotangent object, or None.  Most-recent-first: backward order is
     loss → input, so the producer's entry is the freshest.
@@ -216,12 +220,17 @@ def lookup_grad_bitmap(obj):
     Hits and misses are counted (``registry:hit`` / ``registry:miss``) so
     the runtime guard can tell routine misses (the loss cotangent has no
     producer) from a drop storm — the fault class where emitted bitmaps
-    stop reaching their consumers."""
+    stop reaching their consumers.  ``peek=True`` consults without
+    counting: the gradient collective probes EVERY pytree leaf (biases,
+    embeddings, scalars) and those structural misses would swamp the
+    guard's ``registry:miss`` delta budget with noise."""
     for entry, bitmap, gran in reversed(_GRAD_BITMAPS):
         if entry is obj:
-            stats.record("registry:hit")
+            if not peek:
+                stats.record("registry:hit")
             return bitmap, gran
-    stats.record("registry:miss")
+    if not peek:
+        stats.record("registry:miss")
     return None
 
 

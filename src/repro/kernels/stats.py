@@ -127,13 +127,32 @@ def guard_counts() -> Dict[str, int]:
     return {k: v for k, v in _COUNTS.items() if k.startswith("guard:")}
 
 
+# Runtime (execution-time) counters ride on jax.debug.callback — a host
+# round-trip per execution PER SHARD.  That is the right trade for audits
+# and tests, but on a hot path being wall-clock benchmarked the callbacks
+# dominate the thing measured; this trace-time switch lets a harness trace
+# without them.  Default ON: correctness tooling never has to opt in.
+_RUNTIME_COUNTING = True
+
+
+def set_runtime_counting(on: bool) -> bool:
+    """Enable/disable ``record_at_runtime`` callback staging at trace time;
+    returns the previous setting (restore it in a finally)."""
+    global _RUNTIME_COUNTING
+    prev, _RUNTIME_COUNTING = _RUNTIME_COUNTING, bool(on)
+    return prev
+
+
 def record_at_runtime(kind: str, flag) -> None:
     """Increment counter ``kind`` at EXECUTION time by the runtime value of
     ``flag`` (a traced 0/1 scalar) — the escape hatch for events that only
     exist at run time, like the optimizer's non-finite skip.  ``record``
     counts at trace time (once per trace); this counts once per execution
     in which ``flag`` is nonzero, via an async host callback (it does not
-    force a device sync on the value's consumers)."""
+    force a device sync on the value's consumers).  A no-op while
+    ``set_runtime_counting(False)`` is in effect (benchmark harnesses)."""
+    if not _RUNTIME_COUNTING:
+        return
     import jax as _jax
 
     def _cb(v):

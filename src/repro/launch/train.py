@@ -41,6 +41,7 @@ from repro.optim.optimizer import OptConfig, adamw_init
 from repro.runtime import faults as _faults
 from repro.runtime.guards import StepGuard
 from repro.sharding import partition, sharding_rules
+from repro.sharding import spmd_step as _spmd
 
 
 @dataclasses.dataclass
@@ -103,6 +104,8 @@ def train_loop(
     on_metrics: Optional[Callable[[int, Dict[str, float]], None]] = None,
     guard: Optional[StepGuard] = None,
     loss_flush_steps: int = 4096,
+    spmd: bool = False,
+    collective_cutoff: float = _spmd.DEFAULT_CUTOFF,
 ) -> Dict[str, Any]:
     """Returns {'params', 'opt_state', 'losses', 'straggler', 'resumed_from'}.
 
@@ -113,13 +116,31 @@ def train_loop(
     checkpoints.  ``loss_flush_steps`` bounds the deferred-loss buffer:
     device loss values materialize to host floats in chunks of that many
     steps (one sync per chunk) instead of pinning every step's device
-    value until the loop ends."""
+    value until the loop ends.
+
+    ``spmd=True`` (requires ``mesh``) swaps the jit-partitioned step for
+    the explicit ``shard_map`` step (sharding/spmd_step.py): params and
+    optimizer state replicated, batch sharded over the data axes, and the
+    gradient all-reduce bitmap-compressed through sharding/collectives
+    with dense fallback above ``collective_cutoff`` union live fraction.
+    Guarded execution, checkpointing and mesh-aware rollback compose
+    unchanged — checkpoints stay mesh-agnostic (replicated state restores
+    through the same ``restore_resharded`` path)."""
+    if spmd:
+        if mesh is None:
+            raise ValueError("spmd=True requires a mesh")
+        if tcfg.microbatches != 1:
+            raise ValueError(
+                "spmd mode: the mesh IS the data-parallel split; "
+                "gradient-accumulation microbatching is the jit path's "
+                "feature (use microbatches=1)")
     opt_cfg = OptConfig(
         learning_rate=tcfg.learning_rate, warmup_steps=tcfg.warmup_steps,
         total_steps=tcfg.total_steps, weight_decay=tcfg.weight_decay,
         beta1=tcfg.beta1, beta2=tcfg.beta2, grad_clip=tcfg.grad_clip,
         loss_scale=tcfg.loss_scale, emit_guard_stats=guard is not None)
-    step_fn = make_train_step(cfg, opt_cfg, microbatches=tcfg.microbatches)
+    step_fn = None if spmd else make_train_step(
+        cfg, opt_cfg, microbatches=tcfg.microbatches)
 
     params = lm_init(jax.random.key(tcfg.seed), cfg, dtype=param_dtype)
     opt_state = adamw_init(params)
@@ -127,6 +148,14 @@ def train_loop(
     resumed_from = None
 
     def _shardings(params, opt_state):
+        if spmd:
+            # shard_map replicates params/opt across the mesh; restores
+            # (including elastic ones from sharded checkpoints) land on
+            # the replicated layout.
+            from jax.sharding import NamedSharding, PartitionSpec
+            rep = NamedSharding(mesh, PartitionSpec())
+            return {"params": jax.tree.map(lambda _: rep, params),
+                    "opt": jax.tree.map(lambda _: rep, opt_state)}
         return {
             "params": partition.params_shardings(params, mesh, fsdp=fsdp),
             "opt": partition.to_shardings(
@@ -162,7 +191,15 @@ def train_loop(
             if guard is not None and host_state.get("guard"):
                 guard.import_state(host_state["guard"])
 
-    if mesh is not None:
+    if spmd:
+        sh = _shardings(params, opt_state)
+        params = jax.device_put(params, sh["params"])
+        opt_state = jax.device_put(opt_state, sh["opt"])
+        jitted = _spmd.make_spmd_train_step(cfg, opt_cfg, mesh,
+                                            cutoff=collective_cutoff)
+        import contextlib
+        ctx = contextlib.nullcontext   # no partitioner hints inside shard_map
+    elif mesh is not None:
         p_sh = partition.params_shardings(params, mesh, fsdp=fsdp)
         o_sh = partition.to_shardings(
             partition.opt_state_pspecs(opt_state, params, mesh, fsdp=fsdp),

@@ -19,6 +19,10 @@ module; this module installs into their ``set_*_hook`` slots:
   gemm:emit_bits        bit flipped in an emitted dy bitmap
   registry:register     grad-bitmap registrations dropped (the hand-off
                         fault: emitted bitmaps never reach consumers)
+  collective:allreduce  one shard's live-block contribution zeroed inside
+                        the bitmap-compressed gradient all-reduce (the
+                        transport-corruption class; the dense paths sit
+                        outside the tamper point)
   checkpoint:post_leaves / checkpoint:pre_commit
                         the checkpoint writer crashes at that protocol
                         point (``InjectedCrash``)
@@ -42,6 +46,7 @@ SITES: Dict[str, tuple] = {
     "gemm:spec": ("queue_overflow",),
     "gemm:emit_bits": ("bitmap_flip",),
     "registry:register": ("registry_drop",),
+    "collective:allreduce": ("drop_contrib",),
     "checkpoint:post_leaves": ("crash",),
     "checkpoint:pre_commit": ("crash",),
 }
@@ -104,10 +109,12 @@ def _install_hooks() -> None:
     from repro import checkpoint as ckpt
     from repro.core import sparse_tensor
     from repro.kernels import ops
+    from repro.sharding import collectives
     _PREV_HOOKS = (
         ops.set_tamper_hook(_tamper_hook),
         sparse_tensor.set_register_hook(_register_hook),
         ckpt.set_crash_hook(_crash_hook),
+        collectives.set_collective_hook(_collective_hook),
     )
 
 
@@ -118,10 +125,12 @@ def _uninstall_hooks() -> None:
     from repro import checkpoint as ckpt
     from repro.core import sparse_tensor
     from repro.kernels import ops
-    tamper, register, crash = _PREV_HOOKS
+    from repro.sharding import collectives
+    tamper, register, crash, collective = _PREV_HOOKS
     ops.set_tamper_hook(tamper)
     sparse_tensor.set_register_hook(register)
     ckpt.set_crash_hook(crash)
+    collectives.set_collective_hook(collective)
     _PREV_HOOKS = None
 
 
@@ -158,6 +167,26 @@ def _register_hook(obj, bitmap, gran):
         f.fired += 1
         return False              # veto: the hand-off never happens
     return True
+
+
+def _collective_hook(site: str, contrib, axis_name):
+    """Zero the compact-buffer contribution of ONE shard (``seed`` picks
+    which, mod the axis size) inside the compressed all-reduce — the
+    collective analogue of a torn write: blocks only that shard owned
+    arrive as zeros while the psum'd union bitmap still marks them live.
+    ``fired`` counts traces, not executions (jit caches the traced
+    tamper)."""
+    f = _ARMED.get(site)
+    if f is None or f.kind != "drop_contrib":
+        return contrib
+    import jax.numpy as jnp
+    from jax import lax
+    f.fired += 1
+    name = axis_name if isinstance(axis_name, str) else axis_name[0]
+    idx = lax.axis_index(name)
+    n = lax.psum(1, name)
+    keep = (idx != jnp.mod(f.seed, n)).astype(contrib.dtype)
+    return contrib * keep
 
 
 def _crash_hook(name: str) -> None:
@@ -426,6 +455,72 @@ def _case_registry_drop() -> MatrixRow:
         f"misses: baseline={baseline_misses} faulted={deltas['registry:miss']}")
 
 
+def _case_collective_drop() -> MatrixRow:
+    """One shard's live-block contribution zeroed inside the compressed
+    gradient all-reduce → blocks only that shard owned arrive all-zero
+    while the psum'd union bitmap still marks them live; the guard's
+    consistency probe (``probe_emit`` on the summed gradient against the
+    union bits) flags the disagreement, and the summed grad-norm drops
+    below the clean reduce's.  Survival: the dense path sits OUTSIDE the
+    tamper point — the same reduce with ``cutoff=1.0`` (capacity ≥ every
+    block ⇒ dense psum) is exact under the still-armed fault, which is
+    precisely the degradation ladder's fallback story."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding import collectives
+    from .guards import StepGuard
+    _fresh()
+    n_dev = jax.device_count()
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    gran, m, n = (4, 4), 16, 16                # 4×4 grid = 16 blocks
+    rng = np.random.default_rng(3)
+    # Shard 0 (the one the seed drops) exclusively owns block (0, 0);
+    # blocks (1, 1) and (2, 2) are live on every shard; the rest is dead.
+    shards = np.zeros((n_dev, m, n), np.float32)
+    shards[0, 0:4, 0:4] = rng.standard_normal((4, 4))
+    for s in range(n_dev):
+        shards[s, 4:8, 4:8] = rng.standard_normal((4, 4))
+        shards[s, 8:12, 8:12] = rng.standard_normal((4, 4))
+    bms = (np.abs(shards).reshape(n_dev, 4, 4, 4, 4).sum(axis=(2, 4)) > 0
+           ).astype(np.int32)
+
+    def _reduce(cutoff):
+        def body(xs, bs):
+            return collectives.sparse_psum(
+                xs[0], bs[0], gran, axis_name="data", cutoff=cutoff,
+                return_bits=True)
+        return jax.jit(shard_map(
+            body, mesh=mesh, in_specs=(P("data"), P("data")),
+            out_specs=(P(), P()), check_rep=False))
+
+    guard = StepGuard()
+    fault = arm(Fault("collective:allreduce", "drop_contrib", seed=0))
+    try:
+        out, union = _reduce(0.5)(jnp.asarray(shards), jnp.asarray(bms))
+        out_dense, _ = _reduce(1.0)(jnp.asarray(shards), jnp.asarray(bms))
+    finally:
+        disarm()
+    ref = shards.sum(0)
+    ok_probe, _ = guard.probe_emit(np.asarray(out), np.asarray(union), gran)
+    g = stats.guard_counts()
+    c = stats.counts()
+    norm_drop = 1.0 - float(np.linalg.norm(np.asarray(out))
+                            / np.linalg.norm(ref))
+    detected = (not ok_probe) and g.get("guard:bitmap_mismatch", 0) >= 1 \
+        and fault.fired >= 1 and norm_drop > 0.0
+    survived = bool(np.allclose(np.asarray(out_dense), ref, atol=1e-5)) \
+        and c.get("collective:dense", 0) >= 1
+    return MatrixRow(
+        "collective-drop-contrib", "collective:allreduce", "drop_contrib",
+        detected, "guard:bitmap_mismatch", survived,
+        f"probe_ok={ok_probe} norm_drop={norm_drop:.3f} "
+        f"dense_exact={survived} devices={n_dev}")
+
+
 def _case_ckpt_crash_mid_save() -> MatrixRow:
     """Checkpoint writer dies between the payload write and the commit
     rename → the partial ``.tmp`` dir is never visible as a checkpoint,
@@ -506,6 +601,7 @@ CASES: List[Callable[[], MatrixRow]] = [
     _case_bitmap_flip,
     _case_queue_overflow_demote,
     _case_registry_drop,
+    _case_collective_drop,
     _case_ckpt_crash_mid_save,
     _case_ckpt_corrupt_newest,
 ]

@@ -1,2 +1,6 @@
-"""Distribution layer: mesh-agnostic sharding rules (DP/TP/EP/SP/FSDP)."""
+"""Distribution layer: mesh-agnostic sharding rules (DP/TP/EP/SP/FSDP)
+plus the sparsity-on-the-wire subsystem — bitmap-aware collectives
+(``collectives``) and the explicit shard_map training step
+(``spmd_step``)."""
 from .context import constraint, sharding_rules, current_rules  # noqa: F401
+from . import collectives, partition, spmd_step  # noqa: F401

@@ -1,0 +1,211 @@
+"""Bitmap-aware gradient collectives — sparsity on the wire.
+
+The paper's bitmaps make backward-pass *compute* skippable; this module
+makes the same metadata skip *communication* (TensorDash's observation:
+sparsity metadata should travel with the tensor onto the interconnect).
+A data-parallel gradient all-reduce moves every block of ``dW`` across the
+mesh even when the WG masks already proved most blocks are exactly zero.
+
+``sparse_psum`` is the bitmap-aware all-reduce.  Inside a ``shard_map``
+body it:
+
+  1. coarsens the (emitted/derived) fine bitmap to the collective block
+     granularity (``core.sparse_tensor.coarsen_bitmap`` — the same
+     derivation primitive every kernel mask uses; never a rescan);
+  2. ``psum``s the TINY block bitmap first (``collective:bitmap_psum``) —
+     the union tells every shard which blocks are live *anywhere*;
+  3. gathers only the union-live blocks into a compact buffer of STATIC
+     capacity ``ceil(cutoff · nblocks)`` (prefix-sum compaction, the same
+     scheme as the compact GEMM queue) and ``psum``s that buffer
+     (``collective:compressed``), scattering the sums back into zeros —
+     exact, because a union-dead block is all-zero on every shard (masks
+     may only err toward live, docs/bitmap_lifecycle.md invariant 3);
+  4. falls back to a dense ``psum`` (``collective:dense_fallback``) when
+     the MEASURED union live count exceeds the capacity — past the cutoff
+     the compressed path would lose, so it is never taken.
+
+``dense_psum`` is the tagged dense path (``collective:dense``) used when
+no bitmap is available; ``psum_grads`` maps a gradient pytree through
+whichever applies, looking up each leaf's bitmap in the grad-bitmap
+registry (a peek: misses are structural here and must not feed the
+guard's miss-counter deltas).
+
+All cross-shard traffic in the audited workloads flows through these
+entry points: every ``psum`` carries a ``repro:collective:*`` lifecycle
+scope, and ``analysis/jaxpr_audit.py`` flags any collective primitive
+outside one (COLLECTIVE_UNTAGGED).
+
+Fault site (``runtime/faults.py``): ``collective:allreduce`` — an armed
+hook may tamper with one shard's compact-buffer contribution (the
+transport-corruption fault class).  The dense paths are never tampered:
+falling back to ``dense_psum`` is the survival story.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.sparse_tensor import coarsen_bitmap, lookup_grad_bitmap
+from repro.kernels import stats
+
+AxisNames = Union[str, Sequence[str]]
+
+# Fault-injection tap (repro/runtime/faults.py): an installed hook may
+# tamper with the compact buffer one shard contributes to the compressed
+# all-reduce.  This layer never imports runtime; faults.py installs here.
+_COLLECTIVE_HOOK = None
+
+
+def set_collective_hook(fn):
+    """Install (or, with None, remove) the collective fault hook; returns
+    the previous hook.  The hook receives ``(site, contrib, axis_name)``
+    and returns the (possibly tampered) contribution."""
+    global _COLLECTIVE_HOOK
+    prev, _COLLECTIVE_HOOK = _COLLECTIVE_HOOK, fn
+    return prev
+
+
+def _axes(axis_name: AxisNames):
+    return axis_name if isinstance(axis_name, str) else tuple(axis_name)
+
+
+def dense_psum(x: jnp.ndarray, axis_name: AxisNames) -> jnp.ndarray:
+    """The tagged dense all-reduce — the path for bitmap-less gradients."""
+    stats.record("collective:dense")
+    with stats.lifecycle_scope("collective", "dense"):
+        return lax.psum(x, _axes(axis_name))
+
+
+def psum_scalar(x, axis_name: AxisNames):
+    """Tagged scalar reduction (losses, metrics) — tiny, always dense."""
+    with stats.lifecycle_scope("collective", "scalar"):
+        return lax.psum(x, _axes(axis_name))
+
+
+def _compact_queue(live_flat: jnp.ndarray, capacity: int) -> jnp.ndarray:
+    """Prefix-sum compaction of live block ids into a fixed-capacity queue
+    (the collective analogue of ``kernels.queue_builder``): entry ``q`` is
+    the flat block id of the q-th live block; unused slots hold the
+    sentinel ``nblk`` (gathers zeros, scatters are dropped)."""
+    nblk = live_flat.shape[0]
+    pos = jnp.cumsum(live_flat) - 1
+    slot = jnp.where((live_flat > 0) & (pos < capacity), pos, capacity)
+    queue = jnp.full((capacity + 1,), nblk, jnp.int32)
+    queue = queue.at[slot].set(jnp.arange(nblk, dtype=jnp.int32))
+    return queue[:capacity]
+
+
+def _block_view(x: jnp.ndarray, block: Tuple[int, int]):
+    """(M, N) → (mt, b0, nt, b1) zero-padded 4-D block view + the grid.
+
+    A PURE reshape (row-major axis split, no transpose): block (i, j) is
+    ``view[i, :, j, :]``, so gather/scatter index the view directly and
+    the full-size transpose copy a flat ``(mt·nt, b0, b1)`` layout would
+    need never materializes — the compressed path's local traffic must
+    stay proportional to the CAPACITY, not the tensor."""
+    b0, b1 = block
+    m, n = x.shape
+    mt, nt = -(-m // b0), -(-n // b1)
+    if (mt * b0, nt * b1) != (m, n):
+        x = jnp.pad(x, ((0, mt * b0 - m), (0, nt * b1 - n)))
+    return x.reshape(mt, b0, nt, b1), (mt, nt)
+
+
+def sparse_psum(x: jnp.ndarray, bitmap: jnp.ndarray,
+                gran: Tuple[int, int], *, axis_name: AxisNames,
+                block: Optional[Tuple[int, int]] = None,
+                cutoff: float = 0.5, return_bits: bool = False):
+    """Bitmap-compressed all-reduce of a 2-D gradient across ``axis_name``.
+
+    ``bitmap`` is the shard-local fine bitmap of ``x`` at granularity
+    ``gran`` (emitted by the producing GEMM or derived from operand masks
+    — NEVER rescanned here).  ``block`` is the wire-block granularity the
+    bitmap is coarsened to (default: ``gran`` itself).  ``cutoff`` sets
+    the compressed path's static capacity as a fraction of the block
+    count; a union live count above it falls back to a dense ``psum`` at
+    runtime, so the compressed path never loses correctness or (past the
+    cutoff) bandwidth.
+
+    Returns the all-reduced gradient; with ``return_bits=True`` also the
+    union live-block mask (``(mt, nt)`` int32) for consistency probes
+    (``runtime.guards.StepGuard.probe_emit``).
+    """
+    assert x.ndim == 2, f"sparse_psum wants a 2-D view, got {x.shape}"
+    axes = _axes(axis_name)
+    b0, b1 = block or tuple(gran)
+    blk = bitmap if (b0, b1) == tuple(gran) \
+        else coarsen_bitmap(bitmap, tuple(gran), (b0, b1))
+    with stats.lifecycle_scope("collective", "bitmap"):
+        stats.record("collective:bitmap_psum")
+        union = lax.psum(blk.astype(jnp.int32), axes)
+    live = (union > 0).astype(jnp.int32)
+    live_flat = live.reshape(-1)
+    nblk = int(live_flat.shape[0])
+    capacity = max(1, int(math.ceil(cutoff * nblk)))
+
+    if capacity >= nblk:
+        # The cutoff admits every block: compression cannot move fewer
+        # bytes than the dense reduce, so don't build the machinery.
+        out = dense_psum(x, axes)
+        return (out, union) if return_bits else out
+
+    count = live_flat.sum()
+    overflow = count > capacity
+    stats.record_at_runtime("collective:dense_fallback", overflow)
+    stats.record_at_runtime("collective:compressed", 1 - overflow)
+
+    def _dense(_):
+        with stats.lifecycle_scope("collective", "dense"):
+            return lax.psum(x, axes)
+
+    def _compressed(_):
+        with stats.lifecycle_scope("collective", "compressed"):
+            queue = _compact_queue(live_flat, capacity)
+            x4, (mt, nt) = _block_view(x, (b0, b1))
+            qi, qj = queue // nt, queue % nt
+            # Sentinel id nblk → (mt, 0): the gather CLAMPS out-of-bounds
+            # rows (reads a real block's bytes into dead slots — harmless,
+            # the scatter below DROPS those slots), so dead queue slots
+            # never reach the output.
+            contrib = x4[qi, :, qj, :]                   # (capacity, b0, b1)
+            if _COLLECTIVE_HOOK is not None:
+                contrib = _COLLECTIVE_HOOK(
+                    "collective:allreduce", contrib, axes)
+            summed = lax.psum(contrib, axes)
+            out4 = jnp.zeros((mt, b0, nt, b1), summed.dtype)
+            out4 = out4.at[qi, :, qj, :].set(summed)     # sentinels dropped
+            return out4.reshape(mt * b0, nt * b1)[
+                :x.shape[0], :x.shape[1]].astype(x.dtype)
+
+    out = lax.cond(overflow, _dense, _compressed, None)
+    return (out, union) if return_bits else out
+
+
+def psum_grads(grads: Any, *, axis_name: AxisNames, cutoff: float = 0.5,
+               block: Optional[Tuple[int, int]] = None) -> Any:
+    """All-reduce a gradient pytree: leaves whose bitmap the backward pass
+    registered (``core.sparse_tensor.register_grad_bitmap`` — the WG GEMM
+    derives its output bitmap from the operand masks) go through the
+    bitmap-compressed path; everything else takes the dense ``psum``.
+
+    The registry consult is a PEEK: most leaves (biases, scalars, conv
+    weights the engine didn't annotate) legitimately have no bitmap, and
+    those misses must not count against the guard's ``registry:miss``
+    delta budget."""
+    leaves, tdef = jax.tree_util.tree_flatten(grads)
+    out = []
+    for leaf in leaves:
+        hit = None
+        if getattr(leaf, "ndim", 0) == 2:
+            hit = lookup_grad_bitmap(leaf, peek=True)
+        if hit is not None:
+            bitmap, gran = hit
+            out.append(sparse_psum(leaf, bitmap, gran, axis_name=axis_name,
+                                   block=block, cutoff=cutoff))
+        else:
+            out.append(dense_psum(leaf, axis_name))
+    return jax.tree_util.tree_unflatten(tdef, out)

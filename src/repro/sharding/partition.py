@@ -249,3 +249,50 @@ def to_shardings(pspec_tree: Any, mesh: Mesh) -> Any:
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s), pspec_tree,
         is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# SparseTensor bitmap rules
+# ---------------------------------------------------------------------------
+
+def _spec_axes(entry) -> Tuple[str, ...]:
+    """One PartitionSpec entry → the tuple of mesh axes it names."""
+    if entry is None:
+        return ()
+    if isinstance(entry, str):
+        return (entry,)
+    return tuple(entry)
+
+
+def bitmap_pspec(data_shape: Tuple[int, int], data_spec: P,
+                 gran: Tuple[int, int], mesh: Mesh) -> P:
+    """PartitionSpec for a ``SparseTensor``'s fine bitmap, given the spec
+    of its (2-D view) data: the bitmap shards along the SAME mesh axes as
+    the data, divisibility-guarded like every other rule here — and with
+    the stricter alignment the bitmap's meaning demands.  Bitmap cell
+    (i, j) covers data tile (gran[0]·i…, gran[1]·j…): a shard boundary may
+    therefore never straddle a granularity cell, so a data dim is only
+    mirrored onto the bitmap when ``dim % (axis_size · gran) == 0``
+    (equivalently: every shard holds a whole number of cells).  Otherwise
+    the bitmap dim replicates — conservative, never wrong: a replicated
+    bitmap still describes the sharded data, each shard just holds cells
+    it doesn't own data for."""
+    spec = []
+    for dim, entry, g in zip(data_shape, data_spec, gran):
+        axes = _spec_axes(entry)
+        n = axis_size(mesh, axes)
+        spec.append(entry if axes and dim % (n * g) == 0 else None)
+    return P(*spec)
+
+
+def sparse_tensor_pspecs(st, data_spec: P, mesh: Mesh):
+    """A ``SparseTensor``-shaped pytree of PartitionSpecs (usable directly
+    as a shard_map in/out spec or through ``to_shardings``): the data leaf
+    takes ``data_spec``; the bitmap leaf follows ``bitmap_pspec``."""
+    from repro.core.sparse_tensor import SparseTensor
+    if getattr(st, "bitmap", None) is None:
+        return SparseTensor(data_spec, None, None)
+    return SparseTensor(
+        data_spec,
+        bitmap_pspec(tuple(st.data.shape), data_spec, st.gran, mesh),
+        st.gran)
